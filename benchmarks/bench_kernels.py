@@ -1,0 +1,105 @@
+"""Kernel micro-benchmarks (interpret-mode correctness + jnp-path timing).
+
+On this CPU container the Pallas kernels run in interpret mode (Python), so
+wall-times are NOT indicative of TPU performance; what we measure here is
+(a) the jnp reference path's throughput (the XLA-compiled twin of the
+kernel's math) and (b) the kernels' exactness, plus derived arithmetic
+intensities that feed the roofline discussion.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layering
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_layered_matmul():
+    rows = []
+    rng = np.random.default_rng(0)
+    for (m, d, K, M, N) in [(2, 7, 512, 128, 128), (2, 7, 1024, 256, 256),
+                            (3, 5, 512, 128, 128)]:
+        hi = 1 << (m * d - 1)
+        A = jnp.asarray(rng.integers(-hi, hi, size=(K, M)), jnp.int32)
+        B = jnp.asarray(rng.integers(-hi, hi, size=(K, N)), jnp.int32)
+        # exactness vs oracle
+        parts = np.asarray(ops.layered_matmul_partials(A, B, m=m, d=d,
+                                                       interpret=True))
+        pa = np.asarray(layering.decompose(A, m, d), np.int64)
+        pb = np.asarray(layering.decompose(B, m, d), np.int64)
+        want = np.stack([sum(pa[i].T @ pb[j] for (i, j)
+                             in layering.layer_minijobs(m, l))
+                         for l in range(2 * m - 1)])
+        exact = bool((parts == want).all())
+        # jnp twin timing
+        t = _time(lambda a, b: layering.layered_matmul_jnp(a, b, m=m, d=d),
+                  A, B)
+        flops = 2.0 * m * m * K * M * N
+        ai = flops / ((m * K * M + m * K * N) * 1 + (2 * m - 1) * M * N * 4)
+        rows.append((f"layered_matmul m={m} d={d} {K}x{M}x{N}",
+                     t * 1e6, f"exact={exact} AI={ai:.1f}flop/B"))
+    return rows
+
+
+def bench_flash_attention():
+    rows = []
+    rng = np.random.default_rng(1)
+    for (B, S, H, dh) in [(1, 1024, 8, 64), (1, 2048, 4, 128)]:
+        q = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.bfloat16)
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+        t = _time(lambda a: ref.flash_attention_ref(a, a, a, causal=True),
+                  qf)
+        flops = 4.0 * B * H * S * S * dh  # qk + pv, causal ~/2 ignored
+        rows.append((f"attention_ref B={B} S={S} H={H} dh={dh}",
+                     t * 1e6, f"{flops / t / 1e9:.1f} GFLOP/s (CPU jnp)"))
+    return rows
+
+
+def bench_ssd():
+    from repro.models.ssm import ssd_scan
+    rows = []
+    rng = np.random.default_rng(2)
+    B, S, H, P, N, chunk = 1, 2048, 8, 64, 128, 256
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+    A = -jnp.ones((H,), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, 1, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, 1, N)), jnp.float32)
+    t = _time(lambda *a: ssd_scan(*a, chunk=chunk)[0], x, dt, A, Bm, Cm)
+    # exactness of the fused kernel vs the jnp path
+    from repro.kernels.ops import ssd_scan_fused
+    yk, sk = ssd_scan_fused(x[:, :512], dt[:, :512], A, Bm[:, :512],
+                            Cm[:, :512], chunk=chunk, interpret=True)
+    yj, sj = ssd_scan(x[:, :512], dt[:, :512], A, Bm[:, :512], Cm[:, :512],
+                      chunk=chunk)
+    err = float(jnp.abs(yk - yj).max())
+    rows.append((f"ssd_scan jnp B={B} S={S} H={H} chunk={chunk}",
+                 t * 1e6, f"fused-kernel max err {err:.1e}"))
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for fn in (bench_layered_matmul, bench_flash_attention, bench_ssd):
+        for name, us, derived in fn():
+            print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Render the baseline-vs-optimized roofline comparison (EXPERIMENTS §Perf)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+BASE = os.path.join(HERE, "..", "results", "dryrun")
+PERF = os.path.join(HERE, "..", "results", "perf")
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _step(r):
+    return max(r["compute_s"], r["memory_s"], r["collective_s"])
+
+
+def table() -> str:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(PERF, "*__opt.json"))):
+        opt = _load(fn)
+        if opt.get("status") != "ok":
+            continue
+        base_fn = os.path.join(
+            BASE, f"{opt['arch']}__{opt['shape']}__{opt['mesh']}.json")
+        if not os.path.exists(base_fn):
+            continue
+        base = _load(base_fn)
+        sb, so = _step(base), _step(opt)
+        speedup = sb / so if so else float("inf")
+        fb = base.get("roofline_fraction", 0.0)
+        fo = opt.get("roofline_fraction", 0.0)
+        rows.append((speedup, (
+            f"| {opt['arch']} | {opt['shape']} "
+            f"| {sb:.4g} ({base['bound'][:4]}) | {so:.4g} ({opt['bound'][:4]}) "
+            f"| **{speedup:.1f}x** | {fb:.3f} → {fo:.3f} "
+            f"| {opt.get('profile','')}"
+            f"{'+int8kv' if opt.get('tag','').find('opt')>=0 and opt['kind']=='decode' else ''}"
+            f"{'+mg1024' if 'moe' in opt['arch'] or 'llama4' in opt['arch'] else ''} |")))
+    rows.sort(key=lambda r: -r[0])
+    lines = ["| arch | shape | baseline step_s (bound) | optimized step_s "
+             "(bound) | speedup | roofline frac | config |",
+             "|---|---|---|---|---|---|---|"]
+    lines += [r[1] for r in rows]
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,67 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "single"):
+    recs = []
+    for fn in glob.glob(os.path.join(RESULTS, f"*__{mesh}.json")):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    recs = [r for r in recs if r.get("status") == "ok"]
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    return recs
+
+
+def fmt_row(r):
+    t = [r["compute_s"], r["memory_s"], r["collective_s"]]
+    frac = r.get("roofline_fraction", 0.0)
+    mfr = r.get("model_flops_ratio", 0.0)
+    mem = r.get("memory_analysis", {})
+    peak = mem.get("temp_size_in_bytes", 0) / 2**30 if isinstance(mem, dict) \
+        else 0
+    return (f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {t[0]:.4g} | {t[1]:.4g} | {t[2]:.4g} | {r['bound']} "
+            f"| {mfr:.2f} | {frac:.3f} | {peak:.1f} |")
+
+
+def table(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | kind | compute_s | memory_s | collective_s "
+        "| bound | 6ND/HLO | roofline frac | temp GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def summary(mesh: str = "single") -> dict:
+    recs = load(mesh)
+    worst = min((r for r in recs if r.get("roofline_fraction")),
+                key=lambda r: r["roofline_fraction"])
+    most_coll = max(recs, key=lambda r: r["collective_s"]
+                    / max(r["compute_s"] + r["memory_s"], 1e-12))
+    return {"num_cells": len(recs), "worst_fraction": worst,
+            "most_collective_bound": most_coll}
+
+
+if __name__ == "__main__":
+    print(table("single"))
+    print()
+    s = summary("single")
+    print(f"cells: {s['num_cells']}")
+    w = s["worst_fraction"]
+    print(f"worst roofline fraction: {w['arch']} x {w['shape']} "
+          f"({w['roofline_fraction']:.4f})")
+    c = s["most_collective_bound"]
+    print(f"most collective-bound: {c['arch']} x {c['shape']} "
+          f"(coll {c['collective_s']:.3f}s vs compute {c['compute_s']:.3f}s)")

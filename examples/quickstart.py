@@ -1,0 +1,79 @@
+"""Quickstart: the paper end-to-end on one machine in ~a minute.
+
+1. Layered coded matmul: digit-decompose two matrices, polynomial-encode the
+   mini-jobs, lose a third of the workers, and still reconstruct — watching
+   the result sharpen resolution by resolution (paper §III).
+2. The same layering fused into a TPU Pallas kernel (interpret mode here).
+3. The queueing simulation headline (paper §IV): at a deadline where the
+   full result almost never arrives, the first resolution *always* does.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simulator
+from repro.core.layered_matmul import LayeredCodedMatmul
+from repro.kernels import ops
+
+
+def part1_layered_coded_matmul():
+    print("=" * 72)
+    print("1) Layered + coded matmul with erasures (paper §III)")
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.normal(size=(256, 32)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(256, 24)), jnp.float32)
+
+    pipe = LayeredCodedMatmul(m=2, d=8, n1=2, n2=2, omega=2.0)
+    # 8 coded tasks; any 4 suffice. Erase 4 of them (stragglers).
+    res, _ = pipe.run(A, B, erasures=[1, 3, 6, 7])
+    exact = np.asarray(A.T @ B)
+    print(f"   coded tasks: {pipe.code.num_tasks}, needed: {pipe.code.k}, "
+          f"erased: 4 (half the cluster)")
+    for l in range(res.shape[0]):
+        err = np.abs(res[l] - exact).max() / np.abs(exact).max()
+        print(f"   resolution {l}: relative error {err:.5f}")
+    assert np.abs(res[-1] - exact).max() / np.abs(exact).max() < 1e-2
+
+
+def part2_pallas_kernel():
+    print("=" * 72)
+    print("2) The same layering as one fused MXU kernel (Pallas, interpret)")
+    rng = np.random.default_rng(1)
+    A = jnp.asarray(rng.integers(-8000, 8000, size=(512, 128)), jnp.int32)
+    B = jnp.asarray(rng.integers(-8000, 8000, size=(512, 128)), jnp.int32)
+    res = ops.layered_matmul(A, B, m=2, d=7, interpret=True)
+    exact = np.asarray(A, np.int64).T @ np.asarray(B, np.int64)
+    for l in range(res.shape[0]):
+        err = np.abs(np.asarray(res[l]) - exact).max()
+        print(f"   resolution {l}: max abs error {err:.3e}")
+    parts = ops.layered_matmul_partials(A, B, m=2, d=7, interpret=True)
+    scales = np.asarray([1 << ((2 * 2 - 2 - l) * 7) for l in range(3)],
+                        np.int64)
+    recon = (np.asarray(parts, np.int64)
+             * scales[:, None, None]).cumsum(0)[-1]
+    print(f"   int64 host fusion bit-exact: {np.array_equal(recon, exact)}")
+
+
+def part3_deadline_simulation():
+    print("=" * 72)
+    print("3) Deadline success (paper Fig 3b): P=5 heterogeneous workers")
+    cfg = simulator.SystemConfig(omega=1.018)
+    lay = simulator.simulate(cfg, 500, layered=True, deadline=10.0, seed=0)
+    unlay = simulator.simulate(cfg, 500, layered=False, deadline=10.0,
+                               seed=0)
+    sr = lay.success_rate()
+    print(f"   deadline = 10: success rate per resolution: "
+          f"l0={sr[0]:.3f}  l1={sr[1]:.3f}  l2={sr[2]:.3f}")
+    print(f"   without layering: {unlay.success_rate()[0]:.3f}")
+    print(f"   -> a terminated job still ships resolution 0 "
+          f"({100 * sr[0]:.0f}% of jobs) instead of nothing.")
+
+
+if __name__ == "__main__":
+    part1_layered_coded_matmul()
+    part2_pallas_kernel()
+    part3_deadline_simulation()
+    print("=" * 72)
+    print("quickstart OK")

@@ -1,0 +1,52 @@
+"""Serving with deadline-bounded progressive resolution (paper §IV, on-chip).
+
+Batched greedy decoding where the LM head is digit-plane decomposed
+(LayeredLinear): each step computes logits MSB-plane-first and releases the
+best resolution the per-step budget allows.  Shows token agreement with the
+full-resolution decode as the budget grows — the paper's success-rate curve
+transplanted to serving quality.
+
+Run:  PYTHONPATH=src python examples/serve_progressive.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.launch.serve import ProgressiveServer
+from repro.models import transformer as T
+
+
+def main():
+    arch = "llama3-8b"
+    cfg = registry.get_smoke_config(arch)
+    print(f"serving reduced {arch} ({cfg.num_layers}L d={cfg.d_model}) "
+          f"with a 4-plane layered LM head")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    server = ProgressiveServer(cfg, params, m=4, d=4)
+
+    rng = np.random.default_rng(0)
+    B, prompt_len, gen = 4, 32, 24
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, prompt_len)),
+                         jnp.int32)
+    max_len = prompt_len + gen
+
+    _, caches = server.prefill(tokens, max_len)
+    full, _ = server.decode(tokens[:, -1:], caches, prompt_len, gen)
+
+    print(f"{'budget':>8} {'resolutions':>12} {'agreement with full':>22}")
+    for budget in (1, 2, 3, 4):
+        _, caches = server.prefill(tokens, max_len)
+        out, stats = server.decode(tokens[:, -1:], caches, prompt_len, gen,
+                                   layer_budget=budget)
+        agree = float((np.asarray(out) == np.asarray(full)).mean())
+        print(f"{budget:>8} {stats.released_at_layer[0]:>12} "
+              f"{100 * agree:>20.1f}%")
+    print("\n-> a deadline that only affords the MSB planes still serves "
+          "mostly-correct tokens;\n   budget=m reproduces the exact "
+          "full-resolution decode (paper's no-cost layering claim).")
+
+
+if __name__ == "__main__":
+    main()

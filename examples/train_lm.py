@@ -1,0 +1,51 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps.
+
+Uses the full production stack — config, sharded step builder, synthetic
+bigram data pipeline, AdamW, async checkpointing — on this machine's
+devices.  The bigram chain has entropy ln(branching) = ln(8) ~= 2.08 nats,
+so the loss falling from ~ln(V) ~= 10.4 toward ~2 demonstrates real
+learning, not just a smoke test.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(~15 min on this container's single CPU core at the default size; use
+--d-model 256 --layers 4 for a 2-minute version.)
+"""
+
+import argparse
+
+from repro.configs.base import AttentionConfig, ModelConfig, TrainConfig
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--d-model", type=int, default=768)
+    ap.add_argument("--ckpt-dir", default="results/ckpt_train_lm")
+    args = ap.parse_args()
+
+    heads = max(args.d_model // 64, 2)
+    cfg = ModelConfig(
+        name="train-lm-100m", family="dense", num_layers=args.layers,
+        d_model=args.d_model, d_ff=4 * args.d_model, vocab_size=32_768,
+        attention=AttentionConfig(num_heads=heads,
+                                  num_kv_heads=max(heads // 4, 1),
+                                  head_dim=64),
+        tie_embeddings=True, compute_dtype="float32", remat_policy="none")
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=30,
+                       total_steps=args.steps)
+    out = train_loop(cfg, tcfg, batch=args.batch, seq=args.seq,
+                     steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=100, log_every=10)
+    first, last = out["losses"][0][1], out["losses"][-1][1]
+    print(f"\nloss: {first:.3f} -> {last:.3f} "
+          f"(chain entropy floor ~2.08, vocab ceiling ~10.4)")
+    assert last < first - 1.0, "model failed to learn the bigram chain"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

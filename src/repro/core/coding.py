@@ -1,0 +1,300 @@
+"""Polynomial codes for distributed coded matrix multiplication.
+
+Implements the scheme of Yu, Maddah-Ali & Avestimehr (NeurIPS'17), reviewed
+in the paper's §II-A: split ``A`` into ``n1`` column blocks and ``B`` into
+``n2`` column blocks, encode the i-th coded task's inputs as polynomial
+evaluations
+
+    X^i = sum_r A^r x_i^r          Y^i = sum_s B^s x_i^(s n1)
+
+so that ``(X^i)^T Y^i = h(x_i)`` where ``h`` is a matrix polynomial of degree
+``n1 n2 - 1`` whose coefficient ``(r, s)`` is ``(A^r)^T B^s``.  Any
+``k = n1 n2`` of the ``num_tasks = ceil(k * omega)`` evaluations recover all
+coefficients (MDS property), i.e. the full product ``A^T B``.
+
+Two arithmetic modes:
+
+* ``"float"``  — Chebyshev evaluation points on [-1, 1], decode by solving the
+  k x k Vandermonde system in float64.  Fast, approximate to ~1e-9 for
+  k <= ~32; the practical mode for real-valued workloads.
+* ``"gfp"``    — exact arithmetic in GF(p) with p = 2**31 - 1 (Mersenne).
+  Operands must be non-negative integers < p, and the *true* (integer)
+  matmul entries must be < p for the lift back to the integers to be exact.
+  Matmuls in GF(p) use 16-bit digit splitting (the paper's own layering
+  trick, reused) so accumulation never overflows uint64.
+
+The 1-D special case (``n2 = 1``) is a classic Reed-Solomon-style MDS code
+over matrix blocks — exposed as :class:`MDSCode` and used by the coded
+data-parallel gradient path (see ``repro/core/layered_matmul.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PolynomialCode", "MDSCode", "modmatmul", "MERSENNE_P"]
+
+MERSENNE_P = (1 << 31) - 1
+
+
+# ---------------------------------------------------------------------------
+# Exact modular matmul via 16-bit digit splitting (no uint64 overflow)
+# ---------------------------------------------------------------------------
+
+def modmatmul(x, y, p: int = MERSENNE_P) -> np.ndarray:
+    """``(x.T @ y) mod p`` exactly, for non-negative integer inputs < p.
+
+    Splits each operand into 16-bit hi/lo digits (layering, again):
+    ``x = xh 2^16 + xl`` so every partial matmul accumulates products
+    < 2**32 over at most K <= 2**30 terms inside uint64.  Host NumPy so the
+    exactness never depends on jax_enable_x64 (JAX truncates uint64 to
+    uint32 in the default config).
+    """
+    x = np.asarray(x, dtype=np.uint64)
+    y = np.asarray(y, dtype=np.uint64)
+    if x.shape[0] != y.shape[0]:
+        raise ValueError(f"contracting dims differ: {x.shape} vs {y.shape}")
+    if x.shape[0] > (1 << 30):
+        raise ValueError("K too large for overflow-free uint64 accumulation")
+    mask = np.uint64(0xFFFF)
+    xh, xl = x >> np.uint64(16), x & mask
+    yh, yl = y >> np.uint64(16), y & mask
+    hh = (xh.T @ yh) % p
+    hl = (xh.T @ yl) % p
+    lh = (xl.T @ yh) % p
+    ll = (xl.T @ yl) % p
+    two16 = np.uint64((1 << 16) % p)
+    two32 = np.uint64((1 << 32) % p)
+    return (hh * two32 % p + (hl + lh) % p * two16 % p + ll) % p
+
+
+def _mod_inv(a: int, p: int) -> int:
+    return pow(int(a) % p, p - 2, p)
+
+
+def _vandermonde_inv_mod(points: Sequence[int], p: int) -> np.ndarray:
+    """Inverse of the Vandermonde matrix V[r, c] = points[r]**c, mod p.
+
+    Gaussian elimination over GF(p) with Python ints (k is small: <= ~64).
+    """
+    k = len(points)
+    V = [[pow(int(pt) % p, c, p) for c in range(k)] for pt in points]
+    A = [V[i][:] + [1 if i == j else 0 for j in range(k)] for i in range(k)]
+    # forward elimination
+    for col in range(k):
+        piv = next(r for r in range(col, k) if A[r][col] % p != 0)
+        A[col], A[piv] = A[piv], A[col]
+        inv = _mod_inv(A[col][col], p)
+        A[col] = [(v * inv) % p for v in A[col]]
+        for r in range(k):
+            if r != col and A[r][col] % p != 0:
+                f = A[r][col]
+                A[r] = [(A[r][c] - f * A[col][c]) % p for c in range(2 * k)]
+    return np.array([[A[r][k + c] for c in range(k)] for r in range(k)],
+                    dtype=object)
+
+
+# ---------------------------------------------------------------------------
+# Polynomial code
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolynomialCode:
+    """Polynomial coded matmul: ``A (K, M)``, ``B (K, N)`` -> ``A.T @ B``.
+
+    Args:
+      n1, n2: column-block counts for A and B; recovery threshold k = n1*n2.
+      omega:  redundancy ratio; num_tasks = ceil(k * omega).
+      mode:   "float" (Chebyshev points, float64 decode) or "gfp" (exact).
+    """
+
+    n1: int
+    n2: int
+    omega: float = 1.0
+    mode: str = "float"
+    p: int = MERSENNE_P
+
+    def __post_init__(self):
+        if self.n1 < 1 or self.n2 < 1:
+            raise ValueError("n1, n2 must be >= 1")
+        if self.omega < 1.0:
+            raise ValueError(f"redundancy ratio must be >= 1, got {self.omega}")
+        if self.mode not in ("float", "gfp"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+
+    @property
+    def k(self) -> int:
+        return self.n1 * self.n2
+
+    @property
+    def num_tasks(self) -> int:
+        return max(self.k, math.ceil(self.k * self.omega))
+
+    # -- evaluation points ---------------------------------------------------
+    def points(self) -> np.ndarray:
+        if self.mode == "float":
+            # Chebyshev nodes keep the Vandermonde system well-conditioned.
+            t = self.num_tasks
+            i = np.arange(t)
+            return np.cos((2 * i + 1) * np.pi / (2 * t)).astype(np.float64)
+        return np.arange(1, self.num_tasks + 1, dtype=np.int64)
+
+    # -- encoding --------------------------------------------------------------
+    def _split(self, mat: jax.Array, nblocks: int) -> jax.Array:
+        K, M = mat.shape
+        if M % nblocks:
+            raise ValueError(f"second dim {M} not divisible by {nblocks}")
+        return jnp.stack(jnp.split(mat, nblocks, axis=1), axis=0)  # (n, K, M/n)
+
+    def encode(self, a: jax.Array, b: jax.Array):
+        """Returns coded task inputs ``X (T, K, M/n1)`` and ``Y (T, K, N/n2)``."""
+        blocks_a = self._split(a, self.n1)
+        blocks_b = self._split(b, self.n2)
+        pts = self.points()
+        if self.mode == "float":
+            va = jnp.asarray(
+                np.stack([pts**r for r in range(self.n1)], 0), jnp.float64
+                if jax.config.jax_enable_x64 else jnp.float32)
+            vb = jnp.asarray(
+                np.stack([pts ** (s * self.n1) for s in range(self.n2)], 0),
+                va.dtype)
+            X = jnp.einsum("rkm,rt->tkm", blocks_a.astype(va.dtype), va)
+            Y = jnp.einsum("skn,st->tkn", blocks_b.astype(va.dtype), vb)
+            return X, Y
+        # exact GF(p): encode with Python-int powers reduced mod p
+        va = np.array([[pow(int(pt), r, self.p) for pt in pts]
+                       for r in range(self.n1)], dtype=np.uint64)
+        vb = np.array([[pow(int(pt), s * self.n1, self.p) for pt in pts]
+                       for s in range(self.n2)], dtype=np.uint64)
+        ba = np.asarray(blocks_a, dtype=np.uint64)
+        bb = np.asarray(blocks_b, dtype=np.uint64)
+        # accumulate n1 (resp. n2) products of (<p)*(<p): split coefficient
+        # into 16-bit digits to stay inside uint64.  Host NumPy: the exact
+        # GF(p) path is the bit-exact fusion/verification path, not the
+        # accelerator path (which is "float" mode).
+        X = _mod_combine(ba, va, self.p)
+        Y = _mod_combine(bb, vb, self.p)
+        return X, Y
+
+    # -- per-task compute --------------------------------------------------------
+    def task_result(self, X_i, Y_i):
+        if self.mode == "float":
+            return X_i.T @ Y_i
+        return modmatmul(X_i, Y_i, self.p)
+
+    def compute_all_tasks(self, X, Y):
+        if self.mode == "float":
+            return jnp.einsum("tkm,tkn->tmn", X, Y)
+        return np.stack([modmatmul(X[i], Y[i], self.p)
+                         for i in range(X.shape[0])], 0)
+
+    # -- decoding -------------------------------------------------------------
+    def decode(self, task_ids: Sequence[int], results: jax.Array) -> jax.Array:
+        """Reconstruct ``A.T @ B`` from any k task results.
+
+        Args:
+          task_ids: indices (into the num_tasks codeword) of received results.
+          results:  (k, M/n1, N/n2) stacked task outputs, same order.
+        Returns:
+          (M, N) product.
+        """
+        ids = list(task_ids)[: self.k]
+        if len(ids) < self.k:
+            raise ValueError(
+                f"need {self.k} task results to decode, got {len(ids)}")
+        res = np.asarray(results)[: self.k]
+        pts = self.points()[np.asarray(ids)]
+        if self.mode == "float":
+            V = np.vander(pts, N=self.k, increasing=True)  # (k, k)
+            coeffs = np.linalg.solve(V, res.reshape(self.k, -1))
+            coeffs = coeffs.reshape(self.k, *res.shape[1:])
+        else:
+            Vinv = _vandermonde_inv_mod([int(x) for x in pts], self.p)
+            flat = res.reshape(self.k, -1).astype(object)
+            coeffs = (Vinv @ flat) % self.p
+            coeffs = coeffs.reshape(self.k, *res.shape[1:])
+        # coefficient (r, s) of x^(r + s*n1) is (A^r).T @ B^s
+        rows = []
+        for r in range(self.n1):
+            cols = [coeffs[r + s * self.n1] for s in range(self.n2)]
+            rows.append(np.concatenate(cols, axis=1))
+        out = np.concatenate(rows, axis=0)
+        if self.mode == "gfp":
+            return _lift_gfp(out, self.p)
+        return out
+
+
+def _mod_combine(blocks: np.ndarray, vand: np.ndarray, p: int) -> np.ndarray:
+    """``sum_r blocks[r] * vand[r, t] mod p`` without uint64 overflow."""
+    n = blocks.shape[0]
+    vh, vl = vand >> np.uint64(16), vand & np.uint64(0xFFFF)
+    bh, bl = blocks >> np.uint64(16), blocks & np.uint64(0xFFFF)
+    two16, two32 = (1 << 16) % p, (1 << 32) % p
+    out = np.zeros((vand.shape[1],) + blocks.shape[1:], dtype=np.uint64)
+    for r in range(n):  # n is tiny (n1 or n2)
+        hh = (bh[r][None] * vh[r][:, None, None]) % p
+        hl = (bh[r][None] * vl[r][:, None, None]) % p
+        lh = (bl[r][None] * vh[r][:, None, None]) % p
+        ll = (bl[r][None] * vl[r][:, None, None]) % p
+        term = (hh * two32 + (hl + lh) * two16 + ll) % p
+        out = (out + term) % p
+    return out
+
+
+def _lift_gfp(x_obj: np.ndarray, p: int) -> np.ndarray:
+    """Map GF(p) representatives back to signed integers in (-p/2, p/2]."""
+    flat = np.array([int(v) for v in x_obj.reshape(-1)], dtype=np.int64)
+    flat = np.where(flat > p // 2, flat - p, flat)
+    return flat.reshape(x_obj.shape)
+
+
+# ---------------------------------------------------------------------------
+# 1-D MDS code over pytree-of-array shards (coded data parallelism)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MDSCode:
+    """Systematic-free (k, n) MDS code over equal-shape array shards.
+
+    Encoding: codeword ``c_t = sum_r shard_r * x_t**r`` (Chebyshev points).
+    Any k of the n codewords decode the k shards.  Used for erasure-tolerant
+    coded data parallelism: each pod computes a *coded combination* of
+    gradient shards; the fusion decodes from the k fastest/surviving pods.
+    """
+
+    k: int
+    n: int
+
+    def __post_init__(self):
+        if self.n < self.k:
+            raise ValueError(f"need n >= k, got n={self.n} < k={self.k}")
+
+    def points(self) -> np.ndarray:
+        i = np.arange(self.n)
+        return np.cos((2 * i + 1) * np.pi / (2 * self.n)).astype(np.float64)
+
+    def generator(self, dtype=jnp.float32) -> jax.Array:
+        """(n, k) generator matrix G: codewords = G @ shards."""
+        pts = self.points()
+        return jnp.asarray(np.vander(pts, N=self.k, increasing=True), dtype)
+
+    def encode(self, shards: jax.Array) -> jax.Array:
+        """shards (k, ...) -> codewords (n, ...)."""
+        G = self.generator(shards.dtype)
+        return jnp.tensordot(G, shards, axes=1)
+
+    def decode(self, ids: Sequence[int], codewords: jax.Array) -> jax.Array:
+        """Any k codewords (k, ...) + their ids -> shards (k, ...)."""
+        ids = list(ids)[: self.k]
+        if len(ids) < self.k:
+            raise ValueError(f"need {self.k} codewords, got {len(ids)}")
+        pts = self.points()[np.asarray(ids)]
+        V = np.vander(pts, N=self.k, increasing=True)
+        Vinv = jnp.asarray(np.linalg.inv(V), codewords.dtype)
+        return jnp.tensordot(Vinv, codewords[: self.k], axes=1)

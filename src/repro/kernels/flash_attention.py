@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: blockwise causal flash attention (online softmax).
+
+The prefill_32k hot-spot: materialising S x S attention scores at S = 32768
+is 2 GiB per (batch, head) in fp32 — this kernel never materialises more
+than a (bq, bk) tile.  Standard flash-attention recurrence with running
+max/sum in VMEM scratch; the K/V axis is the innermost grid dimension so
+the output tile accumulates across K blocks.
+
+Causality is exploited structurally: K blocks strictly above the diagonal
+are skipped with ``pl.when`` (no MXU work), halving compute for causal
+masks.  Sliding-window masks reuse the same in-tile position mask.
+
+Grid: (B*H, Sq/bq, Skv/bk); scratch: m (bq,1), l (bq,1), acc (bq, dh).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel_call"]
+
+_NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int | None,
+            bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    def needed() -> bool | jax.Array:
+        if not causal:
+            return True
+        return k_start <= q_start + bq - 1
+
+    @pl.when(needed())
+    def _step():
+        q = q_ref[0].astype(jnp.float32)              # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)              # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)              # (bk, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok = ok & (kpos <= qpos)
+        if window is not None:
+            ok = ok & (kpos > qpos - window)
+        s = jnp.where(ok, s, _NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jax.lax.dot(p.astype(v.dtype), v,
+                                      preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention_kernel_call(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                                causal: bool = True,
+                                window: int | None = None,
+                                bq: int = 512, bk: int = 512,
+                                interpret: bool = False) -> jax.Array:
+    """Attention over (BH, S, dh) tensors (batch*heads flattened).
+
+    q: (BH, Sq, dh), k/v: (BH, Skv, dh) -> (BH, Sq, dh), q.dtype.
+    GQA: repeat/reshape K,V to q's head count before calling (the jnp ops.py
+    wrapper handles the grouping).
+    """
+    BH, Sq, dh = q.shape
+    _, Skv, _ = k.shape
+    bq, bk = min(bq, Sq), min(bk, Skv)
+    if Sq % bq or Skv % bk:
+        raise ValueError(f"seq dims ({Sq},{Skv}) not divisible by ({bq},{bk})")
+    nk = Skv // bk
+    scale = 1.0 / float(np.sqrt(dh))
+    grid = (BH, Sq // bq, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((bq, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This is the ONLY entry point that forces 512 host devices -- tests and
+# benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions every op),
+  * the program fits (memory_analysis),
+  * and it emits the roofline terms (cost_analysis + HLO collective scan)
+    consumed by EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --arch all --out results/dryrun
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             verbose: bool = True, profile: str = "tp_fsdp",
+             bf16_gather: bool = False, remat: str = "",
+             tag: str = "", moe_group: int = 0,
+             bf16_grads: bool = False, kv_dtype: str = "") -> dict:
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.configs import registry
+    from repro.configs.base import SHAPES, TrainConfig
+    from repro.launch import roofline as rl
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import transformer as T
+
+    cfg = registry.get_config(arch)
+    if remat:
+        cfg = _dc.replace(cfg, remat_policy=remat)
+    if moe_group and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe,
+                                               dispatch_group=moe_group))
+    if kv_dtype:
+        cfg = _dc.replace(cfg, kv_cache_dtype=kv_dtype)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.devices.size
+
+    tcfg = TrainConfig(optimizer="adafactor") \
+        if arch == "llama4-maverick-400b-a17b" else TrainConfig()
+    if bf16_gather:
+        tcfg = _dc.replace(tcfg, bf16_weight_gather=True)
+    if bf16_grads:
+        tcfg = _dc.replace(tcfg, bf16_weight_gather=True, bf16_grads=True)
+
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chips": chips, "status": "ok", "profile": profile,
+                 "bf16_gather": bf16_gather, "remat": remat or
+                 cfg.remat_policy, "tag": tag}
+    t0 = time.time()
+    try:
+        cell = steps_lib.build_cell(cfg, shape, mesh, tcfg, profile=profile)
+        t1 = time.time()
+        lowered = cell.lower()
+        t2 = time.time()
+        compiled = lowered.compile()
+        t3 = time.time()
+
+        import gzip
+
+        import numpy as np
+
+        from repro.launch import sharding as sh
+        if out_dir:  # cache the HLO so roofline iteration needs no recompile
+            hlo_dir = os.path.join(out_dir, "..", "hlo")
+            os.makedirs(hlo_dir, exist_ok=True)
+            suffix = f"__{tag}" if tag else ""
+        with gzip.open(os.path.join(
+                    hlo_dir,
+                    f"{arch}__{shape_name}__{mesh_name}{suffix}.txt.gz"),
+                    "wt") as f:
+                f.write(compiled.as_text())
+
+        params_shapes = cell.arg_shapes[0]
+        n_params = sum(int(np.prod(x.shape))
+                       for x in jax.tree.leaves(params_shapes))
+        n_active = T.active_params(cfg, n_params)
+        if cell.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 6.0 * n_active * tokens
+        elif cell.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * n_active * tokens
+        else:  # decode: one token per sequence
+            model_flops = 2.0 * n_active * shape.global_batch
+
+        report = rl.roofline_terms(
+            compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+            kind=cell.kind, chips=chips, model_flops=model_flops)
+        # analytic memory term (see roofline.analytic_memory_bytes): the
+        # unfused-CPU instruction bytes stay in the record as an upper bound
+        opt_bytes = 0.0
+        if cell.kind == "train":
+            pspecs = sh.param_specs(params_shapes, mesh)
+            opt_shapes = cell.arg_shapes[1]
+            ospecs = sh.opt_state_specs(opt_shapes, pspecs, mesh)
+            opt_bytes = sh.spec_bytes_per_device(opt_shapes, ospecs, mesh)
+        cache_bytes = 0.0
+        if cell.kind == "decode":
+            cspecs = sh.cache_specs_tree(cell.arg_shapes[1]["caches"], mesh)
+            cache_bytes = sh.spec_bytes_per_device(
+                cell.arg_shapes[1]["caches"], cspecs, mesh)
+        rec["hlo_bytes_upper_bound"] = report.bytes_per_device
+        report.bytes_per_device = rl.analytic_memory_bytes(
+            cfg, shape, cell.kind, mesh, n_params,
+            opt_state_bytes_per_dev=opt_bytes,
+            cache_bytes_per_dev=cache_bytes)
+        rec["opt_state_bytes_per_dev"] = opt_bytes
+        rec["cache_bytes_per_dev"] = cache_bytes
+        rec.update(report.as_dict())
+        rec["n_params"] = n_params
+        rec["n_active_params"] = n_active
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in
+                ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory_analysis"] = {"error": str(e)}
+        rec["timings_s"] = {"build": t1 - t0, "lower": t2 - t1,
+                            "compile": t3 - t2}
+        if verbose:
+            print(compiled.memory_analysis())
+            print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+                   if k in ("flops", "bytes accessed")})
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = time.time() - t0
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = os.path.join(out_dir,
+                          f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None) -> int:
+    from repro.configs import registry
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--profile", default="tp_fsdp",
+                    choices=["tp_fsdp", "fsdp", "serve"])
+    ap.add_argument("--bf16-gather", action="store_true")
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--tag", default="",
+                    help="suffix for output files (perf variants)")
+    ap.add_argument("--moe-group", type=int, default=0)
+    ap.add_argument("--bf16-grads", action="store_true")
+    ap.add_argument("--kv-dtype", default="")
+    args = ap.parse_args(argv)
+
+    archs = list(registry.ARCH_IDS) if args.arch == "all" else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        cfg = registry.get_config(arch)
+        shapes = (registry.shape_cells(cfg) if args.shape == "all"
+                  else [args.shape])
+        for shape_name in shapes:
+            for mesh_name in meshes:
+                rec = run_cell(arch, shape_name, mesh_name, args.out,
+                               verbose=not args.quiet,
+                               profile=args.profile,
+                               bf16_gather=args.bf16_gather,
+                               remat=args.remat, tag=args.tag,
+                               moe_group=args.moe_group,
+                               bf16_grads=args.bf16_grads,
+                               kv_dtype=args.kv_dtype)
+                tag = (f"{arch} x {shape_name} x {mesh_name}"
+                       f" [{rec.get('kind', '?')}]")
+                if rec["status"] == "ok":
+                    t = {k: round(v, 4) for k, v in
+                         {"compute_s": rec["compute_s"],
+                          "memory_s": rec["memory_s"],
+                          "collective_s": rec["collective_s"]}.items()}
+                    print(f"OK   {tag}: bound={rec['bound']} {t} "
+                          f"wall={rec['wall_s']:.1f}s", flush=True)
+                else:
+                    failures += 1
+                    print(f"FAIL {tag}: {rec['error']}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,283 @@
+"""Trip-count-aware cost extraction from post-optimization HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any model
+using scan-over-layers (all of ours) under-reports FLOPs, bytes and — worst
+— per-layer collectives by the layer count (verified empirically: a scanned
+8-step matmul reports 1 matmul of FLOPs).  This module re-derives costs
+from ``compiled.as_text()``:
+
+* parses every computation block and its instruction shapes,
+* finds each ``while``'s trip count from the loop-condition's comparison
+  constant (jax scans lower to ``lt(induction, constant(N))``),
+* costs dots (2 * prod(out_dims) * contract size), collectives (ring-model
+  bytes/device, as launch/roofline.py) and top-level instruction bytes
+  (operands + results at fusion boundaries — internal temps excluded),
+* and folds callee costs into callers: while bodies/conditions x trip
+  count, fusions/calls x 1, conditionals at the max of their branches.
+
+The result is the per-device (FLOPs, HBM bytes, collective bytes) triple
+the roofline terms need.  It is an *estimate* (elementwise FLOPs are not
+counted; bytes use fusion-boundary accounting) — both choices are
+documented in EXPERIMENTS.md §Roofline methodology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["module_costs", "ModuleCosts"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+# headers like: %region_0.2 (arg: (s32[], f32[2,2])) -> (s32[], f32[2,2]) {
+# (parameter lists may contain nested tuple parens, so just anchor on the
+#  leading name, a "->" and a trailing "{")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TUPLE_SHAPE_RE = re.compile(r"^\(")
+_OP_RE = re.compile(r"^(?:\(.*?\)|\w+\[[\d,]*\][^\s]*)\s+([\w\-]+)\(")
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=\{?%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes_all(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for dim in dims.split(","):
+            if dim:
+                n *= int(dim)
+        total += nb * n
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: list
+    shapes: dict           # value name -> type string
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_counts: dict
+    trip_counts: dict      # while body name -> trip count
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _parse(text: str) -> tuple[dict, Optional[str]]:
+    comps: dict[str, _Computation] = {}
+    entry = None
+    cur: Optional[_Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                cur = _Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # type is everything up to the op token
+        om = _OP_RE.match(rest)
+        op = om.group(1) if om else ""
+        type_str = rest.split(f" {op}(")[0] if op else rest
+        cur.shapes[name] = type_str
+        cur.instrs.append(_Instr(name, type_str, op, rest))
+    return comps, entry
+
+
+def _dot_flops(instr: _Instr, comp: _Computation) -> float:
+    out_elems = 1
+    m = _SHAPE_RE.search(instr.type_str)
+    if m:
+        for dim in m.group(2).split(","):
+            if dim:
+                out_elems *= int(dim)
+    # contracting size from lhs operand shape
+    cm = _CONTRACT_RE.search(instr.line)
+    ops_m = _OPERANDS_RE.search(instr.line)
+    contract = 1
+    if cm and ops_m:
+        operands = [o.strip().lstrip("%") for o in ops_m.group(1).split(",")]
+        if operands:
+            lhs_type = comp.shapes.get(operands[0], "")
+            sm = _SHAPE_RE.search(lhs_type)
+            if sm:
+                dims = [int(x) for x in sm.group(2).split(",") if x]
+                for ci in cm.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def _collective_bytes(instr: _Instr) -> float:
+    rbytes = _shape_bytes_all(instr.type_str)
+    # The CPU backend legalizes bf16 reductions by promoting to f32
+    # (to_apply=%..._promoted): on TPU these all-reduces move bf16, so
+    # count half the f32 bytes.
+    if "promoted" in instr.line and "f32" in instr.type_str:
+        rbytes //= 2
+    g = _GROUPS_RE.search(instr.line)
+    if g:
+        n = len(g.group(1).split(","))
+    else:
+        gi = _GROUPS_IOTA_RE.search(instr.line)
+        n = int(gi.group(2)) if gi else 1
+    op = instr.op
+    if op.startswith("collective-permute"):
+        return float(rbytes)
+    if n <= 1:
+        return 0.0
+    if op.startswith("all-reduce"):
+        return 2.0 * (n - 1) / n * rbytes
+    if op.startswith("reduce-scatter"):
+        return float((n - 1) * rbytes)
+    return (n - 1) / n * rbytes  # all-gather / all-to-all
+
+
+def _instr_bytes(instr: _Instr, comp: _Computation) -> float:
+    """Fusion-boundary bytes: result + operands of top-level instrs."""
+    skip_ops = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "while", "conditional", "call", "after-all",
+                "partition-id", "replica-id", "iota"}
+    if instr.op in skip_ops or not instr.op:
+        return 0.0
+    total = float(_shape_bytes_all(instr.type_str))
+    ops_m = _OPERANDS_RE.search(instr.line)
+    if ops_m:
+        for o in ops_m.group(1).split(","):
+            o = o.strip().lstrip("%")
+            t = comp.shapes.get(o)
+            if t:
+                total += _shape_bytes_all(t)
+    return total
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Largest integer compared against in the condition (scan bound)."""
+    best = 1
+    for instr in cond.instrs:
+        if instr.op in ("compare", "lt", "le"):
+            for c in _CONST_RE.findall(instr.line):
+                best = max(best, int(c))
+        elif instr.op == "constant":
+            for c in _CONST_RE.findall(instr.line):
+                best = max(best, int(c))
+    return best
+
+
+def module_costs(text: str) -> ModuleCosts:
+    comps, entry = _parse(text)
+    if entry is None:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c].instrs)) if comps \
+            else None
+    memo: dict[str, tuple] = {}
+    trip_counts: dict[str, int] = {}
+
+    def cost_of(name: str, stack=()) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0, 0.0, {})
+        comp = comps[name]
+        flops = byts = coll = 0.0
+        counts: dict[str, int] = {}
+        for instr in comp.instrs:
+            if instr.op == "dot":
+                flops += _dot_flops(instr, comp)
+            if any(instr.op.startswith(c) for c in _COLLECTIVES):
+                if instr.op.endswith("-done"):
+                    continue
+                coll += _collective_bytes(instr)
+                key = instr.op.replace("-start", "")
+                counts[key] = counts.get(key, 0) + 1
+            byts += _instr_bytes(instr, comp)
+            # recurse into called computations
+            called = _CALLED_RE.findall(instr.line)
+            if instr.op == "while" and called:
+                body = cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", instr.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", instr.line)
+                body = bm.group(1) if bm else None
+                cond = cm.group(1) if cm else None
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                if body:
+                    trip_counts[body] = trips
+                    f, b, c, k = cost_of(body, stack + (name,))
+                    flops += f * trips
+                    byts += b * trips
+                    coll += c * trips
+                    for kk, vv in k.items():
+                        counts[kk] = counts.get(kk, 0) + vv * trips
+            elif instr.op == "conditional":
+                brm = _BRANCHES_RE.search(instr.line)
+                branches = ([b.strip().lstrip("%") for b in
+                             brm.group(1).split(",")] if brm else called)
+                if branches:
+                    sub = [cost_of(b, stack + (name,)) for b in branches]
+                    f, b_, c, k = max(sub, key=lambda t: t[0] + t[1])
+                    flops += f
+                    byts += b_
+                    coll += c
+                    for kk, vv in k.items():
+                        counts[kk] = counts.get(kk, 0) + vv
+            else:
+                for cal in called:
+                    f, b, c, k = cost_of(cal, stack + (name,))
+                    flops += f
+                    byts += b
+                    coll += c
+                    for kk, vv in k.items():
+                        counts[kk] = counts.get(kk, 0) + vv
+        memo[name] = (flops, byts, coll, counts)
+        return memo[name]
+
+    if entry is None:
+        return ModuleCosts(0, 0, 0, {}, {})
+    f, b, c, k = cost_of(entry)
+    return ModuleCosts(flops=f, hbm_bytes=b, collective_bytes=c,
+                       collective_counts=k, trip_counts=trip_counts)

@@ -1,0 +1,10 @@
+"""Model zoo substrate: layers, MoE, SSM, RG-LRU, transformer assembly."""
+
+from repro.models import (  # noqa: F401
+    layers,
+    loss,
+    moe,
+    rglru,
+    ssm,
+    transformer,
+)

@@ -1,0 +1,198 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention, MLPs, embeddings.
+
+All layers are pure functions over explicit parameter pytrees (no framework).
+Attention is grouped-query throughout: queries are reshaped to
+``(B, S, n_kv, group, head_dim)`` so K/V are never repeated — the grouped
+einsum keeps the KV cache memory footprint exact, which matters for the
+decode_32k/long_500k roofline cells.
+
+Prefill attention over long sequences is query-chunked (lax.scan over query
+blocks with an online max/sum) so the ``S_q x S_kv`` score matrix is never
+materialised — the jnp twin of the Pallas flash-attention kernel in
+``repro.kernels.flash_attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttentionConfig
+
+__all__ = [
+    "rms_norm", "layer_norm", "rope", "attention", "decode_attention",
+    "mlp_swiglu", "mlp_gelu", "init_linear", "init_norm",
+]
+
+_NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(norm_kind: str, x: jax.Array, params: dict) -> jax.Array:
+    if norm_kind == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE to ``x (..., S, n, head_dim)`` given ``positions (..., S)``."""
+    head_dim = x.shape[-1]
+    fraction = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    timescale = theta**fraction                       # (head_dim/2,)
+    angles = (positions[..., None].astype(jnp.float32)
+              / timescale[None, :])                   # (..., S, head_dim/2)
+    angles = angles[..., None, :]                     # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (grouped-query; full / causal / sliding-window; chunked prefill)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(pos_q: jax.Array, pos_k: jax.Array, causal: bool,
+               window: Optional[int], kv_valid: Optional[jax.Array] = None):
+    """(B, 1, 1, Sq, Skv) additive mask bias from position comparisons."""
+    ok = jnp.ones(pos_q.shape[-1:] + pos_k.shape[-1:], dtype=bool)
+    dq, dk = pos_q[..., :, None], pos_k[..., None, :]
+    if causal:
+        ok = ok & (dk <= dq)
+    if window is not None:
+        ok = ok & (dk > dq - window)
+    if kv_valid is not None:
+        ok = ok & kv_valid[..., None, :]
+    # (B, Sq, Skv) -> (B, 1, 1, Sq, Skv): broadcasts over (n_kv, G)
+    return jnp.where(ok, 0.0, _NEG_INF)[..., None, None, :, :]
+
+
+def _attend(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array,
+            softcap: Optional[float]) -> jax.Array:
+    """Grouped attention core.
+
+    q: (B, Sq, n_kv, G, Dh); k, v: (B, Skv, n_kv, Dh);
+    bias: broadcastable to (B, n_kv, G, Sq, Skv).  Returns (B, Sq, n_kv, G, Dh).
+    """
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = logits + bias
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              pos_q: jax.Array, pos_k: jax.Array, cfg: AttentionConfig,
+              *, q_chunk: int = 2048,
+              kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Full attention for train/prefill.
+
+    q: (B, Sq, n_heads, Dh); k/v: (B, Skv, n_kv, Dh); positions are (B, S).
+    Query-chunked when Sq > q_chunk so scores never materialise at S^2.
+    Returns (B, Sq, n_heads, Dh).
+    """
+    B, Sq, H, Dh = q.shape
+    n_kv, G = cfg.num_kv_heads, cfg.group_size
+    qg = q.reshape(B, Sq, n_kv, G, Dh)
+
+    def block(q_blk, pos_blk):
+        bias = _mask_bias(pos_blk, pos_k, cfg.causal, cfg.window, kv_valid)
+        return _attend(q_blk, k, v, bias, cfg.attn_logit_softcap)
+
+    if Sq <= q_chunk:
+        out = block(qg, pos_q)
+    else:
+        assert Sq % q_chunk == 0, (Sq, q_chunk)
+        nblk = Sq // q_chunk
+        qs = qg.reshape(B, nblk, q_chunk, n_kv, G, Dh).swapaxes(0, 1)
+        ps = pos_q.reshape(B, nblk, q_chunk).swapaxes(0, 1)
+        out = jax.lax.map(lambda args: block(*args), (qs, ps))
+        out = out.swapaxes(0, 1).reshape(B, Sq, n_kv, G, Dh)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, cfg: AttentionConfig,
+                     cache_len: jax.Array) -> jax.Array:
+    """Single-token attention against a (B, S_cache, n_kv, Dh) KV cache.
+
+    q: (B, 1, n_heads, Dh); ``pos`` (B,) is the new token's position;
+    ``cache_len`` (B,) marks how many cache slots are valid.
+    """
+    B, _, H, Dh = q.shape
+    n_kv, G = cfg.num_kv_heads, cfg.group_size
+    S = k_cache.shape[1]
+    qg = q.reshape(B, 1, n_kv, G, Dh)
+    slots = jnp.arange(S, dtype=jnp.int32)[None, :]           # (1, S)
+    valid = slots < cache_len[:, None]
+    if cfg.window is not None:
+        valid = valid & (slots > (pos[:, None] - cfg.window))
+    bias = jnp.where(valid, 0.0, _NEG_INF)[:, None, None, None, :]
+    out = _attend(qg, k_cache, v_cache, bias, cfg.attn_logit_softcap)
+    return out.reshape(B, 1, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def mlp_gelu(x: jax.Array, w_fc: jax.Array, b_fc: jax.Array,
+             w_proj: jax.Array, b_proj: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ w_fc + b_fc, approximate=True)
+    return h @ w_proj + b_proj
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, dtype,
+                extra_dims: tuple[int, ...] = ()) -> jax.Array:
+    shape = extra_dims + (d_in, d_out)
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(d: int, dtype, kind: str = "rmsnorm") -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}

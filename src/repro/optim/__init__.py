@@ -1,0 +1,4 @@
+"""Optimizers + layered gradient compression."""
+
+from repro.optim import layered_grads, optimizers  # noqa: F401
+from repro.optim.optimizers import make_optimizer  # noqa: F401

@@ -1,0 +1,282 @@
+"""Model-zoo behaviour: decode==forward consistency, family coverage,
+gradients, and the building blocks (SSD scan, RG-LRU, MoE dispatch)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (AttentionConfig, ModelConfig, MoEConfig,
+                                RGLRUConfig, SSMConfig)
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as T
+from repro.models.layers import attention
+from repro.models.loss import cross_entropy
+
+
+def mk(family, **kw):
+    base = dict(name="t", family=family, num_layers=4, d_model=64, d_ff=128,
+                vocab_size=256, compute_dtype="float32",
+                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                          head_dim=16))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CONFIGS = {
+    "dense": mk("dense"),
+    "dense_gelu": mk("dense", activation="gelu", norm="layernorm",
+                     tie_embeddings=True),
+    "moe": mk("moe", moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64,
+                                   d_ff_shared=96, capacity_factor=4.0)),
+    "moe_interleaved": mk("moe", moe=MoEConfig(num_experts=4, top_k=1,
+                                               d_ff_expert=64,
+                                               capacity_factor=4.0,
+                                               interleave_step=2)),
+    "ssm": mk("ssm", attention=None,
+              ssm=SSMConfig(d_state=16, head_dim=16, chunk_size=8)),
+    "hybrid": mk("hybrid", num_layers=5,
+                 rglru=RGLRUConfig(d_rnn=64, window=8),
+                 attention=AttentionConfig(num_heads=4, num_kv_heads=1,
+                                           head_dim=16)),
+    "audio": mk("audio", encoder_layers=2, encoder_seq=12, norm="layernorm",
+                activation="gelu", tie_embeddings=True),
+    "vlm": mk("vlm", num_image_tokens=8),
+}
+
+
+def _extras(cfg, B, rng):
+    kw = {}
+    if cfg.is_encdec:
+        kw["audio_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.num_image_tokens:
+        kw["extra_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_image_tokens, cfg.d_model)),
+            jnp.float32)
+    return kw
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", list(CONFIGS))
+    def test_train_loss_finite_and_shape(self, rng, name):
+        cfg = CONFIGS[name]
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)),
+                           jnp.int32)
+        loss, metrics = T.forward_train(params, toks, toks, cfg,
+                                        **_extras(cfg, 2, rng))
+        assert np.isfinite(float(loss))
+        logits, _ = T.forward(params, toks, cfg, **_extras(cfg, 2, rng))
+        assert logits.shape == (2, 32, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    @pytest.mark.parametrize("name", list(CONFIGS))
+    def test_decode_matches_forward(self, rng, name):
+        """The invariant that catches cache/RoPE/mask bugs."""
+        cfg = CONFIGS[name]
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        B, S = 2, 16
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)),
+                           jnp.int32)
+        kw = _extras(cfg, B, rng)
+        full_logits, _ = T.forward(params, toks, cfg, **kw)
+        want = np.asarray(full_logits[:, -1, :], np.float32)
+        _, cache = T.prefill(params, toks[:, :S], cfg, max_len=S + 8, **kw)
+        got, _ = T.decode_step(params, toks[:, S:S + 1], cache,
+                               jnp.int32(S), cfg)
+        got = np.asarray(got, np.float32)
+        err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+        assert err < 2e-3, f"{name}: {err}"
+
+    def test_multi_token_decode_consistency(self, rng):
+        """Decoding 3 tokens sequentially == forward over the longer seq."""
+        cfg = CONFIGS["dense"]
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        B, S, extra = 2, 12, 3
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + extra)),
+                           jnp.int32)
+        _, cache = T.prefill(params, toks[:, :S], cfg, max_len=S + extra + 2)
+        for i in range(extra):
+            got, cache = T.decode_step(params, toks[:, S + i: S + i + 1],
+                                       cache, jnp.int32(S + i), cfg)
+        full, _ = T.forward(params, toks, cfg)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(full[:, -1, :], np.float32),
+                                   rtol=1e-3, atol=1e-4)
+
+    @pytest.mark.parametrize("name", ["dense", "moe", "ssm", "hybrid"])
+    def test_gradients_flow_to_all_params(self, rng, name):
+        cfg = CONFIGS[name]
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                           jnp.int32)
+
+        def loss_fn(p):
+            return T.forward_train(p, toks, toks, cfg)[0]
+
+        grads = jax.grad(loss_fn)(params)
+        zero_leaves = [np.allclose(np.asarray(g), 0.0)
+                       for g in jax.tree.leaves(grads)]
+        # at most the (rarely hit) biases may be zero-gradient
+        assert np.mean(zero_leaves) < 0.3, f"{name}: too many dead params"
+        for g in jax.tree.leaves(grads):
+            assert np.isfinite(np.asarray(g, np.float32)).all()
+
+
+class TestBlockGroups:
+    def test_recurrentgemma_pattern(self):
+        cfg = CONFIGS["hybrid"]  # 5 layers, pattern (R, R, A)
+        groups = T.block_groups(cfg)
+        assert groups == [(("rglru", "rglru", "local_attn"), 1),
+                          (("rglru", "rglru"), 1)]
+
+    def test_interleaved_moe(self):
+        groups = T.block_groups(CONFIGS["moe_interleaved"])
+        assert groups == [(("dense", "moe"), 2)]
+
+    def test_layer_counts_match(self):
+        for name, cfg in CONFIGS.items():
+            groups = T.block_groups(cfg)
+            n = sum(len(unit) * reps for unit, reps in groups)
+            assert n == cfg.num_layers, name
+
+
+class TestSSD:
+    def test_ssd_scan_matches_sequential_recurrence(self, rng):
+        """Chunked SSD == naive per-step state recurrence."""
+        B, S, H, P, N, chunk = 1, 24, 2, 4, 8, 8
+        x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+        A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+        Bm = jnp.asarray(rng.normal(size=(B, S, 1, N)), jnp.float32)
+        Cm = jnp.asarray(rng.normal(size=(B, S, 1, N)), jnp.float32)
+        y, final = ssm_lib.ssd_scan(x, dt, A, Bm, Cm, chunk)
+
+        state = np.zeros((B, H, P, N))
+        ys = np.zeros((B, S, H, P))
+        for t in range(S):
+            dA = np.exp(np.asarray(dt[:, t]) * np.asarray(A)[None])
+            state = state * dA[:, :, None, None] + np.einsum(
+                "bh,bn,bhp->bhpn", np.asarray(dt[:, t]),
+                np.asarray(Bm[:, t, 0]), np.asarray(x[:, t]))
+            ys[:, t] = np.einsum("bhpn,bn->bhp", state,
+                                 np.asarray(Cm[:, t, 0]))
+        np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(final), state, rtol=2e-4,
+                                   atol=2e-4)
+
+    def test_ssm_block_state_continuity(self, rng):
+        """block(x[,:S]) state + decode steps == block(x) outputs."""
+        cfg = SSMConfig(d_state=8, head_dim=8, chunk_size=4)
+        D = 32
+        params = ssm_lib.init_ssm_params(jax.random.PRNGKey(1), D, cfg,
+                                         jnp.float32)
+        x = jnp.asarray(rng.normal(size=(1, 13, D)), jnp.float32)
+        y_full, _ = ssm_lib.ssm_block(params, x, D, cfg)
+        y_pre, cache = ssm_lib.ssm_block(params, x[:, :10], D, cfg)
+        outs = [y_pre]
+        for t in range(10, 13):
+            y_t, cache = ssm_lib.ssm_decode_step(params, x[:, t:t + 1],
+                                                 cache, D, cfg)
+            outs.append(y_t)
+        y_steps = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestRGLRU:
+    def test_scan_matches_stepwise(self, rng):
+        cfg = RGLRUConfig(d_rnn=16, window=4)
+        D = 16
+        params = rglru_lib.init_rglru_params(jax.random.PRNGKey(2), D, cfg,
+                                             jnp.float32)
+        x = jnp.asarray(rng.normal(size=(2, 9, D)), jnp.float32)
+        y_full, _ = rglru_lib.rglru_block(params, x, cfg)
+        cache = rglru_lib.init_rglru_cache(2, D, cfg, jnp.float32)
+        outs = []
+        for t in range(9):
+            y_t, cache = rglru_lib.rglru_decode_step(params, x[:, t:t + 1],
+                                                     cache, cfg)
+            outs.append(y_t)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                                   np.asarray(y_full), rtol=2e-3, atol=2e-3)
+
+    def test_stability(self, rng):
+        """|a| < 1 by construction -> bounded state on long input."""
+        cfg = RGLRUConfig(d_rnn=8)
+        params = rglru_lib.init_rglru_params(jax.random.PRNGKey(3), 8, cfg,
+                                             jnp.float32)
+        x = jnp.asarray(10.0 * rng.normal(size=(1, 512, 8)), jnp.float32)
+        y, cache = rglru_lib.rglru_block(params, x, cfg)
+        assert np.isfinite(np.asarray(y)).all()
+        assert np.isfinite(np.asarray(cache["h"])).all()
+
+
+class TestMoE:
+    def test_high_capacity_is_lossless_routing(self, rng):
+        """With capacity >= tokens, MoE == explicit per-token expert mix."""
+        cfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
+                        capacity_factor=8.0)
+        D = 8
+        params = moe_lib.init_moe_params(jax.random.PRNGKey(4), D, cfg,
+                                         jnp.float32)
+        x = jnp.asarray(rng.normal(size=(6, D)), jnp.float32)
+        got = np.asarray(moe_lib.moe_block(params, x, cfg))
+
+        logits = np.asarray(x @ params["router"])
+        gates, idx = moe_lib.router_topk(jnp.asarray(logits), cfg.top_k)
+        gates, idx = np.asarray(gates), np.asarray(idx)
+        want = np.zeros_like(got)
+        for t in range(x.shape[0]):
+            for kk in range(cfg.top_k):
+                e = idx[t, kk]
+                h = (np.asarray(jax.nn.silu(x[t] @ params["we_gate"][e]))
+                     * np.asarray(x[t] @ params["we_up"][e]))
+                want[t] += gates[t, kk] * (h @ np.asarray(
+                    params["we_down"][e]))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_capacity_drops_dont_nan(self, rng):
+        cfg = MoEConfig(num_experts=2, top_k=1, d_ff_expert=8,
+                        capacity_factor=0.25)  # aggressive dropping
+        params = moe_lib.init_moe_params(jax.random.PRNGKey(5), 8, cfg,
+                                         jnp.float32)
+        x = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+        y = moe_lib.moe_block(params, x, cfg)
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_grouping_invariance(self, rng):
+        """Same result whatever the dispatch group size (no drops)."""
+        cfg = MoEConfig(num_experts=4, top_k=1, d_ff_expert=8,
+                        capacity_factor=8.0)
+        params = moe_lib.init_moe_params(jax.random.PRNGKey(6), 8, cfg,
+                                         jnp.float32)
+        x = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+        y1 = np.asarray(moe_lib.moe_block(params, x, cfg, group_size=16))
+        y2 = np.asarray(moe_lib.moe_block(params, x, cfg, group_size=4))
+        np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+
+
+class TestLoss:
+    def test_cross_entropy_matches_manual(self, rng):
+        logits = jnp.asarray(rng.normal(size=(2, 5, 11)), jnp.float32)
+        targets = jnp.asarray(rng.integers(0, 11, (2, 5)), jnp.int32)
+        loss, _ = cross_entropy(logits, targets)
+        p = jax.nn.log_softmax(logits, -1)
+        want = -np.mean([p[b, s, targets[b, s]] for b in range(2)
+                         for s in range(5)])
+        assert float(loss) == pytest.approx(float(want), rel=1e-5)
+
+    def test_mask(self, rng):
+        logits = jnp.asarray(rng.normal(size=(1, 4, 7)), jnp.float32)
+        targets = jnp.zeros((1, 4), jnp.int32)
+        mask = jnp.asarray([[1, 1, 0, 0]], jnp.float32)
+        loss_m, m = cross_entropy(logits, targets, mask)
+        loss_2, _ = cross_entropy(logits[:, :2], targets[:, :2])
+        assert float(loss_m) == pytest.approx(float(loss_2), rel=1e-5)
+        assert float(m["ntokens"]) == 2.0

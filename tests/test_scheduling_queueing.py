@@ -1,0 +1,131 @@
+"""Eq.(1) load balancing + eqs.(2)-(4) G/G/1 bounds + simulator behaviour."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import queueing, scheduling, simulator
+
+
+class TestLoadSplit:
+    def test_sums_exactly(self):
+        stats = [scheduling.worker_job_moments(mu, 1000, 50.0)
+                 for mu in simulator.PAPER_SYSTEM.mu]
+        for total in [1000, 1018, 1060, 1200]:
+            kappa = scheduling.load_split(stats, total)
+            assert kappa.sum() == total
+            assert (kappa >= 0).all()
+
+    def test_faster_worker_gets_more(self):
+        stats = [scheduling.worker_job_moments(mu, 1000, 50.0)
+                 for mu in (100.0, 400.0)]
+        kappa = scheduling.load_split(stats, 500)
+        assert kappa[1] > kappa[0]
+
+    def test_homogeneous_split_is_even(self):
+        stats = [scheduling.worker_job_moments(200.0, 100, 10.0)] * 4
+        kappa = scheduling.load_split(stats, 100)
+        assert kappa.max() - kappa.min() <= 1
+
+    @hypothesis.given(st.lists(st.floats(50.0, 1000.0), min_size=1,
+                               max_size=8),
+                      st.integers(1, 5000))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_property_sum_and_nonneg(self, mus, total):
+        stats = [scheduling.worker_job_moments(mu, 100, 10.0) for mu in mus]
+        kappa = scheduling.load_split(stats, total)
+        assert kappa.sum() == total and (kappa >= 0).all()
+
+    def test_zero_and_errors(self):
+        stats = [scheduling.worker_job_moments(100.0, 10, 1.0)]
+        assert scheduling.load_split(stats, 0).sum() == 0
+        with pytest.raises(ValueError):
+            scheduling.load_split([], 10)
+
+
+class TestQueueingTheory:
+    def test_service_rate_bound(self):
+        # super-worker rate = sum of rates
+        assert queueing.service_rate_bound([2.0, 2.0]) == pytest.approx(1.0)
+
+    def test_gg1_reduces_to_mm1(self):
+        # Poisson arrivals + exponential service: Marchal is exact (M/M/1)
+        lam, mu = 0.5, 1.0
+        arrival = queueing.Moments(1 / lam, 2 / lam**2)
+        service = queueing.Moments(1 / mu, 2 / mu**2)
+        # M/M/1 sojourn: 1/(mu - lam)
+        assert queueing.gg1_delay(arrival, service) == pytest.approx(
+            1.0 / (mu - lam), rel=1e-6)
+
+    def test_unstable_queue_is_inf(self):
+        arrival = queueing.Moments(1.0, 2.0)
+        service = queueing.Moments(2.0, 8.0)
+        assert queueing.gg1_delay(arrival, service) == np.inf
+
+    def test_layered_bounds_monotone(self):
+        cfg = simulator.PAPER_SYSTEM
+        service = queueing.Moments(22.7, 22.7**2 * 1.01)
+        arrival = queueing.Moments(100.0, 2 * 100.0**2)
+        worker_means = [cfg.k * cfg.complexity / mu for mu in cfg.mu]
+        b = queueing.layered_delay_bounds(cfg.m, worker_means, arrival,
+                                          service)
+        assert b.shape == (3,)
+        assert b[0] < b[1] < b[2]
+
+
+class TestSimulator:
+    def test_paper_shape_of_results(self):
+        r = simulator.simulate(simulator.PAPER_SYSTEM, 200, layered=True,
+                               seed=0)
+        assert r.layer_compute.shape == (200, 3)
+        # resolutions complete in order
+        assert (np.diff(r.layer_compute, axis=1) >= 0).all()
+        # no termination without deadline
+        assert not r.terminated.any()
+        assert r.success.all()
+
+    def test_layer_delays_ordered_and_final_matches_unlayered(self):
+        cfg = simulator.PAPER_SYSTEM
+        r = simulator.simulate(cfg, 400, layered=True, seed=1)
+        rn = simulator.simulate(cfg, 400, layered=False, seed=1)
+        d = r.mean_delay()
+        assert d[0] < d[1] < d[2]
+        # final layered resolution ~ no-layering delay (paper Fig 2a claim)
+        assert abs(d[2] - rn.mean_delay()[0]) / d[2] < 0.05
+
+    def test_theory_bound_is_lower_bound_and_tight(self):
+        cfg = simulator.SystemConfig(omega=1.06)
+        r = simulator.simulate(cfg, 600, layered=True, seed=2)
+        bounds = simulator.theory_bounds(cfg, r.service_moments(),
+                                         layered=True)
+        d = r.mean_delay()
+        assert (d >= bounds - 1e-9).all()
+        # tight at ~6% redundancy (paper: "empirically achievable")
+        assert ((d - bounds) / bounds < 0.08).all()
+
+    def test_deadline_layer0_survives(self):
+        cfg = simulator.PAPER_SYSTEM
+        r = simulator.simulate(cfg, 300, layered=True, deadline=10.0, seed=3)
+        sr = r.success_rate()
+        assert sr[0] == 1.0                  # paper Fig 3b headline claim
+        assert sr[2] < 1.0
+        assert (np.diff(sr) <= 1e-9).all()   # monotone in resolution
+
+    def test_deadline_requires_queued_successor(self):
+        # huge inter-arrival gap -> queue empty -> nothing terminated
+        cfg = simulator.SystemConfig(arrival_rate=1e-5)
+        r = simulator.simulate(cfg, 50, layered=True, deadline=1.0, seed=4)
+        assert not r.terminated.any()
+
+    def test_more_redundancy_not_slower(self):
+        cfg1 = simulator.SystemConfig(omega=1.0)
+        cfg2 = simulator.SystemConfig(omega=1.1)
+        d1 = simulator.simulate(cfg1, 400, seed=5).mean_delay()[-1]
+        d2 = simulator.simulate(cfg2, 400, seed=5).mean_delay()[-1]
+        assert d2 <= d1 * 1.02
+
+    def test_kappa_used_matches_eq1(self):
+        cfg = simulator.PAPER_SYSTEM
+        r = simulator.simulate(cfg, 10, layered=True, seed=6)
+        assert r.kappa.sum() == cfg.total_tasks
