@@ -146,26 +146,38 @@ class PolynomialCode:
         return np.arange(1, self.num_tasks + 1, dtype=np.int64)
 
     # -- encoding --------------------------------------------------------------
-    def _split(self, mat: jax.Array, nblocks: int) -> jax.Array:
+    def _split(self, mat, nblocks: int):
         K, M = mat.shape
         if M % nblocks:
             raise ValueError(f"second dim {M} not divisible by {nblocks}")
-        return jnp.stack(jnp.split(mat, nblocks, axis=1), axis=0)  # (n, K, M/n)
+        xp = np if isinstance(mat, np.ndarray) else jnp
+        return xp.stack(xp.split(mat, nblocks, axis=1), axis=0)  # (n, K, M/n)
 
-    def encode(self, a: jax.Array, b: jax.Array):
-        """Returns coded task inputs ``X (T, K, M/n1)`` and ``Y (T, K, N/n2)``."""
+    def encode(self, a, b):
+        """Returns coded task inputs ``X (T, K, M/n1)`` and ``Y (T, K, N/n2)``.
+
+        Float mode dispatches on input type: NumPy operands are encoded on
+        the host in float64 (exact points, no device round-trip — the
+        runtime master's per-round hot path); JAX operands go through the
+        device einsum (float32 unless jax_enable_x64).
+        """
         blocks_a = self._split(a, self.n1)
         blocks_b = self._split(b, self.n2)
         pts = self.points()
         if self.mode == "float":
-            va = jnp.asarray(
-                np.stack([pts**r for r in range(self.n1)], 0), jnp.float64
-                if jax.config.jax_enable_x64 else jnp.float32)
-            vb = jnp.asarray(
-                np.stack([pts ** (s * self.n1) for s in range(self.n2)], 0),
-                va.dtype)
-            X = jnp.einsum("rkm,rt->tkm", blocks_a.astype(va.dtype), va)
-            Y = jnp.einsum("skn,st->tkn", blocks_b.astype(va.dtype), vb)
+            va = np.stack([pts**r for r in range(self.n1)], 0)
+            vb = np.stack([pts ** (s * self.n1) for s in range(self.n2)], 0)
+            if isinstance(a, np.ndarray) and isinstance(b, np.ndarray):
+                X = np.einsum("rkm,rt->tkm",
+                              blocks_a.astype(np.float64), va)
+                Y = np.einsum("skn,st->tkn",
+                              blocks_b.astype(np.float64), vb)
+                return X, Y
+            dtype = (jnp.float64 if jax.config.jax_enable_x64
+                     else jnp.float32)
+            va, vb = jnp.asarray(va, dtype), jnp.asarray(vb, dtype)
+            X = jnp.einsum("rkm,rt->tkm", blocks_a.astype(dtype), va)
+            Y = jnp.einsum("skn,st->tkn", blocks_b.astype(dtype), vb)
             return X, Y
         # exact GF(p): encode with Python-int powers reduced mod p
         va = np.array([[pow(int(pt), r, self.p) for pt in pts]

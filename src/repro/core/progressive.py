@@ -31,7 +31,7 @@ from repro.core import layering
 
 __all__ = [
     "LayeredLinear", "make_layered_linear", "layered_linear_apply",
-    "two_sided_layered_matmul", "resolution_series",
+    "two_sided_layered_matmul", "resolution_series", "plane_step",
 ]
 
 
@@ -89,6 +89,20 @@ def layered_linear_apply(params: LayeredLinear, x: jax.Array,
     return x @ w_eff
 
 
+def plane_step(params: LayeredLinear, x: jax.Array, l: int,
+               acc: Optional[jax.Array] = None) -> jax.Array:
+    """One MSB-first incremental step: add plane ``m-1-l``'s contribution.
+
+    Returns the UNSCALED accumulator (multiply by ``params.scale`` for the
+    resolution-``l`` output).  The single source of the per-plane math —
+    :func:`resolution_series` and the deadline-bounded server
+    (``repro.launch.serve``) both build on it.
+    """
+    i = params.m - 1 - l
+    contrib = (x @ params.planes[i].astype(x.dtype)) * float(1 << (i * params.d))
+    return contrib if acc is None else acc + contrib
+
+
 def resolution_series(params: LayeredLinear, x: jax.Array) -> jax.Array:
     """All m weight-only resolutions, shape (m, *x.shape[:-1], d_out).
 
@@ -96,13 +110,10 @@ def resolution_series(params: LayeredLinear, x: jax.Array) -> jax.Array:
     deadline-bounded server does; ``series[-1]`` equals the full-precision
     quantized product.
     """
-    m, d = params.m, params.d
     outs = []
     acc = None
-    for l in range(m):
-        i = m - 1 - l
-        contrib = (x @ params.planes[i].astype(x.dtype)) * float(1 << (i * d))
-        acc = contrib if acc is None else acc + contrib
+    for l in range(params.m):
+        acc = plane_step(params, x, l, acc)
         outs.append(acc * params.scale.astype(x.dtype))
     return jnp.stack(outs, axis=0)
 

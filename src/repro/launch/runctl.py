@@ -1,0 +1,161 @@
+"""``runctl`` — drive the measured runtime engine from the command line.
+
+Runs a coded layered-matmul workload on the real master/worker/fusion
+runtime (``repro.runtime``), prints the paper-style per-resolution delay
+table, and optionally validates the measurement against the §IV event
+simulator and the eq. (4) theory bounds on the same configuration.
+
+Examples::
+
+    # 200 jobs, exp stragglers, 35 ms deadline, verify decodes, JSON out
+    PYTHONPATH=src python -m repro.launch.runctl --jobs 200 \
+        --complexity 10 --deadline 0.035 --straggler exp \
+        --json results/runctl.json
+
+    # same cluster, cross-checked against the simulator
+    PYTHONPATH=src python -m repro.launch.runctl --jobs 100 --compare-sim
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import simulator
+from repro.runtime import (RuntimeConfig, delay_table, format_delay_table,
+                           run_jobs)
+
+__all__ = ["main", "build_config", "summarize"]
+
+
+def _floats(text: str) -> tuple[float, ...]:
+    return tuple(float(x) for x in text.split(",") if x)
+
+
+def _ints(text: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in text.split(",") if x)
+
+
+def build_config(args: argparse.Namespace) -> RuntimeConfig:
+    return RuntimeConfig(
+        mu=_floats(args.mu), arrival_rate=args.arrival_rate,
+        n1=args.n1, n2=args.n2, omega=args.omega, m=args.planes, d=args.d,
+        gamma=args.gamma, complexity=args.complexity,
+        deadline=args.deadline, straggler=args.straggler,
+        stall_workers=_ints(args.stall_workers),
+        stall_seconds=args.stall_seconds,
+        use_jax_devices=args.jax_devices, seed=args.seed)
+
+
+def summarize(cfg: RuntimeConfig, result) -> dict:
+    """JSON-serializable run summary (the ``--json`` artifact)."""
+    rows = delay_table(result)
+    out = {
+        "config": {
+            "mu": list(cfg.mu), "arrival_rate": cfg.arrival_rate,
+            "n1": cfg.n1, "n2": cfg.n2, "omega": cfg.omega, "m": cfg.m,
+            "d": cfg.d, "gamma": cfg.gamma, "complexity": cfg.complexity,
+            "deadline": cfg.deadline, "straggler": cfg.straggler,
+            "stall_workers": list(cfg.stall_workers), "seed": cfg.seed,
+        },
+        "num_jobs": int(result.num_jobs),
+        "kappa": [int(x) for x in result.kappa],
+        "delay_per_resolution": rows,
+        "terminated_jobs": int(result.terminated.sum()),
+        "release_histogram": [int(x) for x in result.release_histogram()],
+        "worker_utilization": [round(float(u), 4)
+                               for u in result.utilization],
+        "stale_results": int(result.stale_results),
+        "wall_elapsed": float(result.wall_elapsed),
+    }
+    if result.verify_errors is not None:
+        finite = result.verify_errors[np.isfinite(result.verify_errors)]
+        out["max_verify_rel_error"] = (float(finite.max())
+                                       if finite.size else None)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="runctl", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--jobs", type=int, default=50)
+    ap.add_argument("--mu", default="385.95,650.92,373.40,415.75,373.98",
+                    help="comma list of worker service rates")
+    ap.add_argument("--arrival-rate", type=float, default=12.0,
+                    help="Poisson job arrivals per second")
+    ap.add_argument("--n1", type=int, default=2)
+    ap.add_argument("--n2", type=int, default=2)
+    ap.add_argument("--omega", type=float, default=1.5)
+    ap.add_argument("--planes", "-m", type=int, default=2, dest="planes",
+                    help="digit chunks m (L = 2m-1 resolutions)")
+    ap.add_argument("--d", type=int, default=8, help="digit width, bits")
+    ap.add_argument("--gamma", type=float, default=1.0)
+    ap.add_argument("--complexity", type=float, default=10.0,
+                    help="per-task complexity: exp straggler delay scale is "
+                         "complexity / (m^2 mu_p) seconds")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="seconds from service start (None = no deadline)")
+    ap.add_argument("--straggler", choices=("none", "exp", "stall"),
+                    default="exp")
+    ap.add_argument("--stall-workers", default="",
+                    help="comma list of worker ids pinned slow (stall mode)")
+    ap.add_argument("--stall-seconds", type=float, default=30.0)
+    ap.add_argument("--jax-devices", action="store_true",
+                    help="place per-worker compute on JAX devices")
+    ap.add_argument("--K", type=int, default=64)
+    ap.add_argument("--M", type=int, default=8)
+    ap.add_argument("--N", type=int, default=8)
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip decode-vs-oracle verification")
+    ap.add_argument("--compare-sim", action="store_true",
+                    help="also run the §IV simulator + eq.(4) bounds on the "
+                         "same configuration")
+    ap.add_argument("--sim-jobs", type=int, default=4000)
+    ap.add_argument("--json", default=None, help="write summary JSON here")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = build_config(args)
+    print(f"[runctl] {cfg.num_workers} workers, k={cfg.k} of "
+          f"T={cfg.total_tasks} coded tasks/round, {cfg.num_rounds} rounds, "
+          f"L={cfg.num_layers} resolutions, straggler={cfg.straggler}, "
+          f"deadline={cfg.deadline}")
+    result, _ = run_jobs(cfg, args.jobs, K=args.K, M=args.M, N=args.N,
+                         verify=not args.no_verify)
+    print(f"[runctl] kappa (eq.1 split): {result.kappa.tolist()}  "
+          f"utilization: {np.round(result.utilization, 3).tolist()}")
+    print(f"[runctl] terminated {int(result.terminated.sum())}/"
+          f"{result.num_jobs} jobs; release histogram "
+          f"(none, res0..): {result.release_histogram().tolist()}; "
+          f"stale results: {result.stale_results}")
+    if result.verify_errors is not None:
+        finite = result.verify_errors[np.isfinite(result.verify_errors)]
+        if finite.size:
+            print(f"[runctl] decode verified vs exact layered oracle: "
+                  f"max rel error {finite.max():.2e}")
+    print("[runctl] measured delay per resolution (seconds):")
+    print(format_delay_table(delay_table(result)))
+
+    if args.compare_sim:
+        scfg = cfg.to_system_config()
+        sim = simulator.simulate(scfg, args.sim_jobs, layered=True,
+                                 deadline=cfg.deadline, seed=cfg.seed)
+        bounds = simulator.theory_bounds(scfg, sim.service_moments(),
+                                         layered=True)
+        print(f"[runctl] simulator ({args.sim_jobs} jobs, same config):")
+        print(format_delay_table(delay_table(sim, bounds=bounds)))
+
+    if args.json:
+        path = pathlib.Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(summarize(cfg, result), indent=2))
+        print(f"[runctl] wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

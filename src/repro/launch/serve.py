@@ -104,6 +104,18 @@ class ProgressiveServer:
             lambda h: progressive.resolution_series(self.lm_head,
                                                     h.astype(jnp.float32)))
 
+        # Per-plane incremental head steps (progressive.plane_step), MSB
+        # first.  Separate jitted fns (not one fused series) so a deadline
+        # can stop BEFORE the next plane's matmul is issued.
+        def make_plane_fn(l: int):
+            if l == 0:
+                return jax.jit(lambda h: progressive.plane_step(
+                    self.lm_head, h.astype(jnp.float32), 0))
+            return jax.jit(lambda h, acc: progressive.plane_step(
+                self.lm_head, h.astype(jnp.float32), l, acc))
+
+        self._plane_fns = [make_plane_fn(l) for l in range(self.m)]
+
     def prefill(self, tokens, max_len: int, **extras):
         return T.prefill(self.params, tokens, self.cfg, max_len=max_len,
                          **extras)
@@ -113,22 +125,37 @@ class ProgressiveServer:
                deadline_ms: Optional[float] = None):
         """Greedy decode; each step releases logits at the resolution the
         budget allows.  Returns (tokens (B, num_tokens), stats)."""
+        if layer_budget is not None and deadline_ms is not None:
+            raise ValueError(
+                "layer_budget and deadline_ms are mutually exclusive "
+                "budgets; pass one or the other")
         stats = ServeStats()
         tok = tokens
         out = []
         for i in range(num_tokens):
             pos = jnp.int32(start_pos + i)
             hidden, caches = self._hidden_step(self.params, tok, caches, pos)
-            t0 = time.perf_counter()
-            series = self._head_series(hidden)     # (m, B, V)
             if deadline_ms is not None:
-                elapsed = (time.perf_counter() - t0) * 1e3
-                frac = min(1.0, deadline_ms / max(elapsed, 1e-6))
-                release = max(1, int(np.ceil(frac * self.m)))
+                # Incremental MSB-first accumulation: the deadline bounds
+                # the compute actually performed — once it passes, no
+                # further plane matmul is issued and the partial sum (a
+                # valid Definition-1 resolution) is released as-is.
+                t0 = time.perf_counter()
+                acc = None
+                release = 0
+                for l in range(self.m):
+                    acc = (self._plane_fns[l](hidden) if acc is None
+                           else self._plane_fns[l](hidden, acc))
+                    jax.block_until_ready(acc)
+                    release = l + 1
+                    if (time.perf_counter() - t0) * 1e3 >= deadline_ms:
+                        break
+                logits = acc * self.lm_head.scale
             else:
                 release = (self.m if layer_budget is None
                            else max(1, min(layer_budget, self.m)))
-            logits = series[release - 1]
+                series = self._head_series(hidden)     # (m, B, V)
+                logits = series[release - 1]
             stats.steps += 1
             stats.full_resolution += int(release == self.m)
             stats.released_at_layer.append(release)
@@ -145,6 +172,9 @@ def main(argv=None) -> int:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--layer-budget", type=int, default=None,
                     help="resolutions computable per step (None = all)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="wall-clock budget per decode step; planes are "
+                         "accumulated MSB-first until it expires")
     ap.add_argument("--planes", type=int, default=2)
     args = ap.parse_args(argv)
 
@@ -169,7 +199,8 @@ def main(argv=None) -> int:
             (args.batch, cfg.num_image_tokens, cfg.d_model), cfg.cdtype())
     _, caches = server.prefill(tokens, max_len, **extras)
     out, stats = server.decode(tokens[:, -1:], caches, args.prompt_len,
-                               args.gen, layer_budget=args.layer_budget)
+                               args.gen, layer_budget=args.layer_budget,
+                               deadline_ms=args.deadline_ms)
     print(f"[serve] generated {out.shape} tokens; "
           f"{stats.full_resolution}/{stats.steps} steps at full resolution; "
           f"release layers: {stats.released_at_layer}")

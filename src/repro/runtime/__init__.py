@@ -1,0 +1,34 @@
+"""Asynchronous master-worker coded execution engine with layered fusion.
+
+The measured counterpart of ``repro.core.simulator``: real coded matmul
+tasks on concurrent workers, any-k fusion per MSB-first round, purge of
+stale tasks, and §IV deadline termination releasing the highest completed
+resolution.  Results come back in the simulator's ``SimResult`` shape so
+measured runs validate directly against ``simulate()`` and
+``theory_bounds()``.
+
+Quickstart::
+
+    from repro.runtime import RuntimeConfig, run_jobs
+
+    cfg = RuntimeConfig(mu=(400.0, 650.0, 380.0), arrival_rate=30.0,
+                        complexity=2.0, deadline=0.05, straggler="exp")
+    result, futures = run_jobs(cfg, num_jobs=50, verify=True)
+    print(result.mean_delay(), result.success_rate())
+"""
+
+from repro.runtime.fusion import FusionNode, LayeredResult, RoundFusion
+from repro.runtime.master import Master, make_jobs, run_jobs
+from repro.runtime.metrics import (RuntimeResult, delay_table,
+                                   format_delay_table)
+from repro.runtime.tasks import (JobSpec, RoundContext, RuntimeConfig,
+                                 TaskResult, TaskSpec)
+from repro.runtime.worker import StragglerModel, Worker, WorkerPool
+
+__all__ = [
+    "RuntimeConfig", "JobSpec", "RoundContext", "TaskSpec", "TaskResult",
+    "Worker", "WorkerPool", "StragglerModel",
+    "FusionNode", "RoundFusion", "LayeredResult",
+    "Master", "make_jobs", "run_jobs",
+    "RuntimeResult", "delay_table", "format_delay_table",
+]

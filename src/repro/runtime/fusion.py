@@ -1,0 +1,154 @@
+"""Any-``k``-of-``n`` fusion node and the per-job layered-result future.
+
+The fusion node holds the current round's buffer: as soon as any ``k`` of
+the round's ``T`` coded task results land it signals the master, which
+decodes (Vandermonde solve, :meth:`PolynomialCode.decode`) and purges the
+round's stragglers.  Late results from a purged round are dropped and
+counted (``stale_results``) — the runtime analogue of the simulator
+sampling round durations as the k-th order statistic.
+
+:class:`LayeredResult` is the job's progressive future: a consumer can
+block on *any* resolution independently (``wait_resolution``), read the
+best resolution available right now (``best_resolution``), or wait for the
+job's release (finish or deadline termination).  Per Definition 1,
+resolution ``l`` becomes ready the moment its last mini-job fuses —
+MSB-first, so resolution 0 is ready after a single round.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.core import coding
+from repro.runtime.tasks import RoundContext, TaskResult
+
+__all__ = ["RoundFusion", "FusionNode", "LayeredResult"]
+
+
+class RoundFusion:
+    """Collects one round's task results; fuses at the k-th arrival."""
+
+    def __init__(self, ctx: RoundContext, k: int):
+        self.ctx = ctx
+        self.k = k
+        self._lock = threading.Lock()
+        self._fused = threading.Event()
+        self._ids: list[int] = []
+        self._values: list[np.ndarray] = []
+        self.fused_at: Optional[float] = None
+
+    def post(self, result: TaskResult) -> bool:
+        """Deliver one task result; returns False if stale (late/purged)."""
+        with self._lock:
+            if self._fused.is_set() or self.ctx.cancelled:
+                return False
+            self._ids.append(result.task_id)
+            self._values.append(result.value)
+            if len(self._ids) == self.k:
+                self.fused_at = result.finished_at
+                self._fused.set()
+        return True
+
+    def wait(self, timeout: Optional[float]) -> bool:
+        """Block until k results landed; False on timeout (deadline)."""
+        return self._fused.wait(timeout=timeout)
+
+    def decode(self, code: coding.PolynomialCode) -> np.ndarray:
+        """Reconstruct the round's mini-job product from the k results."""
+        if not self._fused.is_set():
+            raise RuntimeError("round has not fused yet")
+        return np.asarray(code.decode(self._ids, np.stack(self._values)))
+
+
+class FusionNode:
+    """Routes worker results to the current round; drops stale ones."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._current: Optional[RoundFusion] = None
+        self.stale_results = 0
+
+    def begin_round(self, ctx: RoundContext, k: int) -> RoundFusion:
+        rf = RoundFusion(ctx, k)
+        with self._lock:
+            self._current = rf
+        return rf
+
+    def post(self, result: TaskResult) -> None:
+        with self._lock:
+            rf = self._current
+        if (rf is None
+                or rf.ctx.job_id != result.job_id
+                or rf.ctx.round_idx != result.round_idx
+                or not rf.post(result)):
+            with self._lock:
+                self.stale_results += 1
+
+
+class LayeredResult:
+    """Future-like progressive result of one job (L resolutions).
+
+    ``resolution(l)`` / ``wait_resolution(l)`` expose per-resolution
+    readiness; ``released`` fires at job end (all rounds done, or deadline
+    termination) with ``released_resolution`` the highest completed layer
+    (-1 if even resolution 0 was cut off).
+    """
+
+    def __init__(self, job_id: int, num_layers: int):
+        self.job_id = job_id
+        self.num_layers = num_layers
+        self._events = [threading.Event() for _ in range(num_layers)]
+        self._values: list[Optional[np.ndarray]] = [None] * num_layers
+        self._ready_at: list[Optional[float]] = [None] * num_layers
+        self._released = threading.Event()
+        self.released_resolution: int = -1
+        self.terminated = False
+
+    # -- producer side (master) ---------------------------------------------
+    def mark_resolution(self, l: int, value: np.ndarray, t: float) -> None:
+        self._values[l] = value
+        self._ready_at[l] = t
+        self._events[l].set()
+
+    def release(self, *, terminated: bool) -> None:
+        self.terminated = terminated
+        self.released_resolution = self.best_resolution()
+        self._released.set()
+
+    # -- consumer side -------------------------------------------------------
+    def resolution_ready(self, l: int) -> bool:
+        return self._events[l].is_set()
+
+    def wait_resolution(self, l: int,
+                        timeout: Optional[float] = None) -> bool:
+        return self._events[l].wait(timeout=timeout)
+
+    def resolution(self, l: int) -> np.ndarray:
+        if not self._events[l].is_set():
+            raise RuntimeError(f"resolution {l} not ready")
+        return self._values[l]
+
+    def ready_at(self, l: int) -> Optional[float]:
+        return self._ready_at[l]
+
+    def best_resolution(self) -> int:
+        """Highest ready resolution index, or -1 if none."""
+        best = -1
+        for l in range(self.num_layers):
+            if self._events[l].is_set():
+                best = l
+        return best
+
+    def wait_released(self, timeout: Optional[float] = None) -> bool:
+        return self._released.wait(timeout=timeout)
+
+    def result(self) -> np.ndarray:
+        """The released (or current best) resolution's value."""
+        best = self.best_resolution()
+        if best < 0:
+            raise RuntimeError(
+                f"job {self.job_id}: no resolution completed")
+        return self._values[best]

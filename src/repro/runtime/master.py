@@ -1,0 +1,215 @@
+"""The master node: queue, dispatch, purge, terminate, release (§IV).
+
+A measured, genuinely-concurrent execution of the system the simulator
+models: jobs arrive (Poisson or trace), are served FIFO one at a time
+(the paper's single-master discipline), and each job's ``m**2`` coded
+mini-job rounds run MSB-first on the worker pool:
+
+1. service start — operands are quantized (floats) and digit-decomposed;
+2. per round, the mini-job's plane pair is polynomial-encoded
+   (:class:`~repro.core.coding.PolynomialCode`) and its ``T`` coded tasks
+   are dispatched per the eq. (1) ``kappa`` split;
+3. the fusion node decodes at the k-th arrival and the master *purges*
+   the round's stragglers (their cancel event reclaims them instantly);
+4. each completed layer is published MSB-first on the job's
+   :class:`~repro.runtime.fusion.LayeredResult`;
+5. the §IV rule terminates a job at
+   ``t_term = max(service_start + deadline, next_arrival)`` — termination
+   requires BOTH deadline excess AND a queued successor — releasing the
+   highest completed resolution.
+
+With ``verify=True`` every published resolution is checked against the
+exact layered oracle (``layering.layered_matmul_reference``, the same
+oracle the Pallas kernel in ``repro.kernels.layered_matmul`` is tested
+against), so a measured run is decode-verified end-to-end.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layering
+from repro.runtime import metrics
+from repro.runtime.fusion import FusionNode, LayeredResult
+from repro.runtime.tasks import JobSpec, RoundContext, RuntimeConfig
+from repro.runtime.worker import WorkerPool, clock
+
+__all__ = ["Master", "make_jobs", "run_jobs"]
+
+
+def make_jobs(cfg: RuntimeConfig, num_jobs: int, *, K: int = 64, M: int = 8,
+              N: int = 8, rng: Optional[np.random.Generator] = None,
+              arrivals: Optional[Sequence[float]] = None) -> list[JobSpec]:
+    """Random integer-matrix jobs with Poisson (or trace) arrivals.
+
+    Operand magnitudes stay well inside ``m * d`` bits so float-mode decode
+    is tight; ``M``/``N`` must be divisible by ``n1``/``n2``.
+    """
+    rng = rng if rng is not None else np.random.default_rng(cfg.seed)
+    if arrivals is None:
+        arrivals = np.cumsum(
+            rng.exponential(1.0 / cfg.arrival_rate, size=num_jobs))
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    if len(arrivals) != num_jobs:
+        raise ValueError(f"{len(arrivals)} arrivals for {num_jobs} jobs")
+    lim = 1 << (cfg.m * cfg.d - 2)
+    return [JobSpec(job_id=j,
+                    a=rng.integers(-lim, lim, size=(K, M), dtype=np.int64),
+                    b=rng.integers(-lim, lim, size=(K, N), dtype=np.int64),
+                    arrival=float(arrivals[j]))
+            for j in range(num_jobs)]
+
+
+class Master:
+    """Event loop owning the worker pool and the fusion node."""
+
+    def __init__(self, cfg: RuntimeConfig, *, verify: bool = False):
+        self.cfg = cfg
+        self.verify = verify
+        self.fusion = FusionNode()
+        self._code = cfg.code()
+        self._kappa = cfg.load_split()
+
+    # -- operand preparation -------------------------------------------------
+    def _prepare(self, job: JobSpec):
+        """Quantize float operands, digit-decompose both into m planes."""
+        cfg = self.cfg
+        bits = cfg.m * cfg.d
+        if np.issubdtype(np.asarray(job.a).dtype, np.floating):
+            qa, sa = layering.quantize(jnp.asarray(job.a), bits)
+            qa, sa = np.asarray(qa, np.int64), float(sa)
+        else:
+            qa, sa = np.asarray(job.a, np.int64), 1.0
+        if np.issubdtype(np.asarray(job.b).dtype, np.floating):
+            qb, sb = layering.quantize(jnp.asarray(job.b), bits)
+            qb, sb = np.asarray(qb, np.int64), float(sb)
+        else:
+            qb, sb = np.asarray(job.b, np.int64), 1.0
+        ca = layering._np_decompose(qa, cfg.m, cfg.d)   # (m, K, M)
+        cb = layering._np_decompose(qb, cfg.m, cfg.d)   # (m, K, N)
+        return qa, qb, sa * sb, ca, cb
+
+    def _encode_round(self, ca_i: np.ndarray, cb_j: np.ndarray):
+        """Polynomial-encode one mini-job (host float64 fast path)."""
+        return self._code.encode(np.asarray(ca_i, np.float64),
+                                 np.asarray(cb_j, np.float64))
+
+    def _warmup(self, job: JobSpec) -> None:
+        """Run one encode/compute/decode off the clock (BLAS/cache warm)."""
+        _, _, _, ca, cb = self._prepare(job)
+        X, Y = self._encode_round(ca[0], cb[0])
+        self._code.decode(list(range(self._code.k)),
+                          np.stack([X[t].T @ Y[t]
+                                    for t in range(self._code.k)]))
+
+    # -- the event loop --------------------------------------------------------
+    def run(self, jobs: Sequence[JobSpec]
+            ) -> tuple[metrics.RuntimeResult, list[LayeredResult]]:
+        """Serve ``jobs`` FIFO; returns (measured result, per-job futures)."""
+        cfg = self.cfg
+        code, kappa = self._code, self._kappa
+        L = cfg.num_layers
+        order = layering.all_minijobs_msb_first(cfg.m)
+        cum = layering.cumulative_minijobs(cfg.m)
+        J = len(jobs)
+        if J == 0:
+            raise ValueError("need at least one job")
+
+        pool = WorkerPool(cfg, sink=self.fusion.post,
+                          rng=np.random.default_rng(cfg.seed + 1))
+        pool.start()
+        self._warmup(jobs[0])
+
+        arrivals = np.asarray([jb.arrival for jb in jobs])
+        starts = np.zeros(J)
+        ends = np.zeros(J)
+        layer_compute = np.full((J, L), np.inf)
+        success = np.zeros((J, L), dtype=bool)
+        terminated = np.zeros(J, dtype=bool)
+        released = np.full(J, -1, dtype=np.int64)
+        verify_errors = np.full((J, L), np.nan) if self.verify else None
+        futures: list[LayeredResult] = []
+
+        t0 = clock()
+        try:
+            for j, job in enumerate(jobs):
+                wait = (t0 + job.arrival) - clock()
+                if wait > 0:           # idle until the job actually arrives
+                    time.sleep(wait)
+                start = clock()
+                qa, qb, scale, ca, cb = self._prepare(job)
+                lr = LayeredResult(job.job_id, L)
+                futures.append(lr)
+
+                next_arrival = (t0 + jobs[j + 1].arrival
+                                if j + 1 < J else None)
+                t_term = None
+                if cfg.deadline is not None and next_arrival is not None:
+                    # §IV: BOTH deadline excess AND a queued successor.
+                    t_term = max(start + cfg.deadline, next_arrival)
+
+                acc = np.zeros((qa.shape[1], qb.shape[1]), dtype=np.float64)
+                term = False
+                for ridx, (l, pi, pj) in enumerate(order):
+                    if t_term is not None and clock() >= t_term:
+                        term = True   # don't encode/dispatch a dead round
+                        break
+                    ctx = RoundContext(job.job_id, ridx)
+                    X, Y = self._encode_round(ca[pi], cb[pj])
+                    rf = self.fusion.begin_round(ctx, code.k)
+                    pool.dispatch_round(ctx, X, Y, kappa)
+                    timeout = (None if t_term is None
+                               else max(0.0, t_term - clock()))
+                    fused = rf.wait(timeout)
+                    ctx.purge()        # reclaim the round's stragglers
+                    if not fused:
+                        term = True
+                        break
+                    mini = rf.decode(code)
+                    acc += mini * float(1 << ((pi + pj) * cfg.d))
+                    if ridx + 1 == cum[l]:   # layer l's last mini-job fused
+                        lr.mark_resolution(l, acc * scale, clock())
+                end = clock()
+                lr.release(terminated=term)
+
+                starts[j] = start - t0
+                ends[j] = end - t0
+                terminated[j] = term
+                released[j] = lr.released_resolution
+                for l in range(L):
+                    if lr.resolution_ready(l):
+                        success[j, l] = True
+                        layer_compute[j, l] = lr.ready_at(l) - start
+                if self.verify:
+                    ref = layering.layered_matmul_reference(
+                        qa, qb, m=cfg.m, d=cfg.d).astype(np.float64) * scale
+                    for l in range(L):
+                        if lr.resolution_ready(l):
+                            denom = max(float(np.abs(ref[l]).max()), 1.0)
+                            verify_errors[j, l] = float(
+                                np.abs(lr.resolution(l) - ref[l]).max()
+                                / denom)
+        finally:
+            pool.shutdown()
+
+        result = metrics.RuntimeResult(
+            arrivals=arrivals, starts=starts, ends=ends,
+            layer_compute=layer_compute, success=success,
+            terminated=terminated, kappa=kappa,
+            worker_busy=pool.busy_seconds, wall_elapsed=clock() - t0,
+            stale_results=self.fusion.stale_results, released=released,
+            verify_errors=verify_errors)
+        return result, futures
+
+
+def run_jobs(cfg: RuntimeConfig, num_jobs: int, *, K: int = 64, M: int = 8,
+             N: int = 8, verify: bool = False,
+             arrivals: Optional[Sequence[float]] = None
+             ) -> tuple[metrics.RuntimeResult, list[LayeredResult]]:
+    """Convenience: generate ``num_jobs`` random jobs and run them."""
+    jobs = make_jobs(cfg, num_jobs, K=K, M=M, N=N, arrivals=arrivals)
+    return Master(cfg, verify=verify).run(jobs)

@@ -1,0 +1,108 @@
+"""Measured-run accounting, shaped like the simulator's ``SimResult``.
+
+:class:`RuntimeResult` *is a* :class:`repro.core.simulator.SimResult`
+(same per-job arrays, same ``delay`` / ``mean_delay`` / ``success_rate``
+semantics, times in seconds from the run start) so a measured run drops
+straight into any analysis written for ``simulate()`` — in particular the
+runtime-vs-simulator agreement checks and the paper's per-resolution delay
+tables.  On top it records what only a real execution has: worker
+occupancy, stale (purged-too-late) results, and per-layer decode-vs-oracle
+verification errors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import simulator
+
+__all__ = ["RuntimeResult", "delay_table", "format_delay_table"]
+
+
+@dataclasses.dataclass
+class RuntimeResult(simulator.SimResult):
+    """Per-job outcome arrays of a measured runtime execution.
+
+    Inherited (see ``SimResult``): arrivals, starts, ends, layer_compute,
+    success, terminated, kappa — all wall-clock seconds relative to the run
+    start.  Added:
+
+    ``worker_busy[p]``   seconds worker p spent occupied (delay + compute).
+    ``wall_elapsed``     run duration (last service end - run start).
+    ``stale_results``    task results that arrived after their round fused.
+    ``released[j]``      highest resolution released for job j (-1 = none).
+    ``verify_errors``    (J, L) max relative decode error vs the exact
+                         layered oracle, NaN where unverified/incomplete
+                         (populated when the master runs with verify=True).
+    """
+
+    worker_busy: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    wall_elapsed: float = 0.0
+    stale_results: int = 0
+    released: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64))
+    verify_errors: np.ndarray | None = None
+
+    @property
+    def utilization(self) -> np.ndarray:
+        """Fraction of the run each worker spent occupied."""
+        if self.wall_elapsed <= 0:
+            return np.zeros_like(self.worker_busy)
+        return self.worker_busy / self.wall_elapsed
+
+    def release_histogram(self) -> np.ndarray:
+        """(L + 1,) job counts by released resolution; slot 0 = none (-1)."""
+        L = self.layer_compute.shape[1]
+        counts = np.zeros(L + 1, dtype=np.int64)
+        for r in self.released:
+            counts[int(r) + 1] += 1
+        return counts
+
+
+def delay_table(result: simulator.SimResult,
+                bounds: np.ndarray | None = None) -> list[dict]:
+    """Per-resolution summary rows (the paper's Fig.-style table).
+
+    Works for both simulated and measured results; ``bounds`` (optional)
+    attaches the eq. (4) theoretical lower bounds per resolution.
+    """
+    mean = result.mean_delay()
+    rate = result.success_rate()
+    d = result.delay
+    rows = []
+    for l in range(d.shape[1]):
+        ok = np.isfinite(d[:, l])
+        row = {
+            "resolution": l,
+            "mean_delay": float(mean[l]),
+            "p50_delay": float(np.median(d[ok, l])) if ok.any() else None,
+            "p95_delay": (float(np.percentile(d[ok, l], 95))
+                          if ok.any() else None),
+            "success_rate": float(rate[l]),
+        }
+        if bounds is not None:
+            row["theory_lower_bound"] = float(bounds[l])
+        rows.append(row)
+    return rows
+
+
+def format_delay_table(rows: list[dict]) -> str:
+    """Fixed-width rendering of :func:`delay_table` for CLI/bench output."""
+    has_bound = "theory_lower_bound" in rows[0]
+    head = (f"{'res':>4} {'mean delay':>12} {'p50':>10} {'p95':>10} "
+            f"{'success':>8}")
+    if has_bound:
+        head += f" {'eq.(4) bound':>13}"
+    lines = [head]
+    for r in rows:
+        p50 = f"{r['p50_delay']:.4f}" if r["p50_delay"] is not None else "-"
+        p95 = f"{r['p95_delay']:.4f}" if r["p95_delay"] is not None else "-"
+        line = (f"{r['resolution']:>4} {r['mean_delay']:>12.4f} {p50:>10} "
+                f"{p95:>10} {r['success_rate']:>8.3f}")
+        if has_bound:
+            line += f" {r['theory_lower_bound']:>13.4f}"
+        lines.append(line)
+    return "\n".join(lines)

@@ -1,0 +1,174 @@
+"""Shared task/job/config types for the asynchronous runtime.
+
+The runtime executes the paper's system for real: each *job* is a coded
+layered matmul ``A.T @ B``; each of its ``m**2`` *mini-jobs* (one digit
+plane pair ``(i, j)``) is polynomial-encoded into ``T = ceil(k * omega)``
+*coded tasks* that are dispatched to concurrent workers.  A mini-job is one
+master-paced *round*: it fuses as soon as any ``k`` task results land, and
+the master purges the round's stragglers.
+
+``RoundContext`` carries the purge signal: workers wait out their injected
+straggler delay on ``cancel`` so a purge (or job termination) reclaims them
+*immediately* — the runtime analogue of the simulator's "workers idle until
+the round boundary" semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.core import coding, layering, scheduling
+
+__all__ = ["RuntimeConfig", "JobSpec", "RoundContext", "TaskSpec",
+           "TaskResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Cluster + code + workload parameters for a runtime execution.
+
+    Mirrors :class:`repro.core.simulator.SystemConfig` where the concepts
+    overlap (``mu``, ``arrival_rate``, ``m``, ``omega``, ``gamma``,
+    ``complexity``) so measured runs validate directly against
+    ``simulate()``; adds the code geometry (``n1``, ``n2``, ``d``) and the
+    straggler-injection model that the simulator only samples.
+    """
+
+    mu: tuple[float, ...] = (385.95, 650.92, 373.40, 415.75, 373.98)
+    arrival_rate: float = 50.0     # Poisson job arrivals per second
+    n1: int = 2                    # polynomial-code column blocks of A
+    n2: int = 2                    # polynomial-code column blocks of B
+    omega: float = 1.5             # redundancy ratio: T = ceil(n1*n2*omega)
+    m: int = 2                     # digit chunks -> L = 2m-1 resolutions
+    d: int = 8                     # digit width (bits)
+    gamma: float = 1.0             # eq. (1) moment trade-off
+    complexity: float = 1.0        # per-task complexity (full, unlayered)
+    deadline: Optional[float] = None   # seconds from service start
+    straggler: str = "none"        # "none" | "exp" | "stall"
+    stall_workers: tuple[int, ...] = ()   # worker ids pinned slow ("stall")
+    stall_seconds: float = 30.0    # stall duration (>> any deadline)
+    use_jax_devices: bool = False  # place per-worker compute on JAX devices
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.straggler not in ("none", "exp", "stall"):
+            raise ValueError(f"unknown straggler model {self.straggler!r}")
+        if self.omega < 1.0:
+            raise ValueError(f"redundancy ratio must be >= 1, got {self.omega}")
+        if any(not 0 <= w < len(self.mu) for w in self.stall_workers):
+            raise ValueError(f"stall_workers {self.stall_workers} out of "
+                             f"range for {len(self.mu)} workers")
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.mu)
+
+    @property
+    def k(self) -> int:
+        """Recovery threshold: any k of the T coded tasks decode a round."""
+        return self.n1 * self.n2
+
+    @property
+    def total_tasks(self) -> int:
+        return max(self.k, math.ceil(self.k * self.omega))
+
+    @property
+    def num_layers(self) -> int:
+        return layering.num_layers(self.m)
+
+    @property
+    def num_rounds(self) -> int:
+        return self.m * self.m
+
+    @property
+    def minijob_complexity(self) -> float:
+        return self.complexity / (self.m * self.m)
+
+    def code(self) -> coding.PolynomialCode:
+        return coding.PolynomialCode(n1=self.n1, n2=self.n2, omega=self.omega,
+                                     mode="float")
+
+    def to_system_config(self):
+        """The §IV simulator configuration this runtime config realises.
+
+        Time units line up because the simulator's per-task time for
+        complexity c on worker p is Exp(mu_p / c) — exactly the runtime's
+        "exp" straggler injection in seconds.
+        """
+        from repro.core import simulator
+        return simulator.SystemConfig(
+            mu=self.mu, arrival_rate=self.arrival_rate, k=self.k,
+            complexity=self.complexity, m=self.m, omega=self.omega,
+            gamma=self.gamma)
+
+    def load_split(self) -> np.ndarray:
+        """Eq. (1) integer task split kappa_p over workers (sum == T)."""
+        stats = [scheduling.worker_job_moments(mu, self.k,
+                                               self.minijob_complexity)
+                 for mu in self.mu]
+        return scheduling.load_split(stats, self.total_tasks, self.gamma)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One job: compute ``a.T @ b`` with layered resolution.
+
+    ``a (K, M)`` and ``b (K, N)``; float inputs are quantized to ``m*d``
+    bits at service start (ints pass through).  ``arrival`` is the offset in
+    seconds from the run start at which the job enters the queue.
+    """
+
+    job_id: int
+    a: np.ndarray
+    b: np.ndarray
+    arrival: float = 0.0
+
+
+class RoundContext:
+    """Purge/cancel state shared by one round's coded tasks.
+
+    ``cancel`` is set when the round fuses (purge) or the job is terminated;
+    workers block on it instead of sleeping so reclamation is immediate.
+    """
+
+    __slots__ = ("job_id", "round_idx", "cancel")
+
+    def __init__(self, job_id: int, round_idx: int):
+        self.job_id = job_id
+        self.round_idx = round_idx
+        self.cancel = threading.Event()
+
+    @property
+    def cancelled(self) -> bool:
+        return self.cancel.is_set()
+
+    def purge(self) -> None:
+        self.cancel.set()
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """One coded task: compute ``x.T @ y`` for codeword ``task_id``."""
+
+    ctx: RoundContext
+    task_id: int            # index into the round's T-task codeword
+    x: np.ndarray           # (K, M/n1) coded block of A planes
+    y: np.ndarray           # (K, N/n2) coded block of B planes
+    delay: float            # injected straggler delay (seconds)
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskResult:
+    """A completed coded task, as delivered to the fusion node."""
+
+    job_id: int
+    round_idx: int
+    task_id: int
+    worker_id: int
+    value: np.ndarray       # (M/n1, N/n2)
+    finished_at: float      # wall-clock (time.monotonic)

@@ -1,0 +1,192 @@
+"""Concurrent worker pool executing real coded matmul tasks.
+
+Each worker is a thread with its own FIFO task queue (the master assigns
+``kappa_p`` coded tasks per round, eq. (1)).  A task is a genuine matrix
+product ``x.T @ y`` of polynomial-coded blocks; heterogeneity and
+stragglers are injected as a pre-task delay sampled by the master from the
+pluggable straggler model:
+
+* ``"none"``  — no injected delay; tasks run as fast as the host allows.
+* ``"exp"``   — delay ~ Exp(scale = complexity / mu_p), the §IV service
+  model (worker p's task time for complexity c is Exp(mu_p / c)).
+* ``"stall"`` — like ``"exp"`` but workers listed in ``stall_workers``
+  freeze for ``stall_seconds`` per task (a dead/hogged node); redundancy
+  (omega > 1) is what keeps rounds fusing without them.
+
+Workers wait out the injected delay on the round's ``cancel`` event, so a
+purge (round fused elsewhere, or job terminated) reclaims a delayed worker
+immediately — matching the simulator's master-paced round boundaries.
+
+Optionally (``use_jax_devices``) each worker places its products on a JAX
+device (round-robin over ``jax.devices()``); the default compute path is
+host BLAS, which releases the GIL so the pool genuinely overlaps.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.runtime.tasks import RuntimeConfig, TaskResult, TaskSpec
+
+__all__ = ["StragglerModel", "Worker", "WorkerPool", "clock"]
+
+clock = time.monotonic
+
+
+class StragglerModel:
+    """Samples per-task injected delays for each worker (master-side RNG)."""
+
+    def __init__(self, cfg: RuntimeConfig, rng: np.random.Generator):
+        self._cfg = cfg
+        self._rng = rng
+
+    def sample(self, worker_id: int, num_tasks: int) -> np.ndarray:
+        """(num_tasks,) delays in seconds for one worker's round queue."""
+        cfg = self._cfg
+        if num_tasks == 0 or cfg.straggler == "none":
+            return np.zeros(num_tasks)
+        if cfg.straggler == "stall" and worker_id in cfg.stall_workers:
+            return np.full(num_tasks, cfg.stall_seconds)
+        scale = cfg.minijob_complexity / cfg.mu[worker_id]
+        return self._rng.exponential(scale=scale, size=num_tasks)
+
+
+def _host_compute(x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    return x.T @ y
+
+
+def _jax_compute(device) -> Callable[[np.ndarray, np.ndarray], np.ndarray]:
+    import jax
+    import jax.numpy as jnp
+
+    fn = jax.jit(lambda x, y: jnp.matmul(x.T, y))
+
+    def compute(x: np.ndarray, y: np.ndarray) -> np.ndarray:
+        return np.asarray(fn(jax.device_put(x, device),
+                             jax.device_put(y, device)))
+
+    return compute
+
+
+class Worker(threading.Thread):
+    """One worker thread: FIFO queue, cancellation-aware delay, compute."""
+
+    def __init__(self, worker_id: int,
+                 sink: Callable[[TaskResult], None],
+                 compute: Callable[[np.ndarray, np.ndarray], np.ndarray]):
+        super().__init__(name=f"runtime-worker-{worker_id}", daemon=True)
+        self.worker_id = worker_id
+        self._sink = sink
+        self._compute = compute
+        self._queue: collections.deque[TaskSpec] = collections.deque()
+        self._cv = threading.Condition()
+        self._stopping = False
+        self.busy_seconds = 0.0      # occupied (delay + compute), incl. purged
+        self.tasks_done = 0
+        self.tasks_purged = 0
+
+    def submit(self, specs: Sequence[TaskSpec]) -> None:
+        with self._cv:
+            self._queue.extend(specs)
+            self._cv.notify()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stopping = True
+            self._cv.notify()
+
+    def run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._stopping:
+                    self._cv.wait()
+                if not self._queue:
+                    return          # stopping and drained
+                task = self._queue.popleft()
+            self._process(task)
+
+    def _process(self, task: TaskSpec) -> None:
+        if task.ctx.cancelled:
+            self.tasks_purged += 1
+            return
+        t0 = clock()
+        if task.delay > 0.0:
+            # block on the purge event, not time.sleep: a fused round
+            # reclaims this worker immediately.
+            if task.ctx.cancel.wait(timeout=task.delay):
+                self.busy_seconds += clock() - t0
+                self.tasks_purged += 1
+                return
+        elif task.ctx.cancelled:
+            self.tasks_purged += 1
+            return
+        value = self._compute(task.x, task.y)
+        now = clock()
+        self.busy_seconds += now - t0
+        self.tasks_done += 1
+        self._sink(TaskResult(job_id=task.ctx.job_id,
+                              round_idx=task.ctx.round_idx,
+                              task_id=task.task_id,
+                              worker_id=self.worker_id,
+                              value=value, finished_at=now))
+
+
+class WorkerPool:
+    """The cluster: ``cfg.num_workers`` concurrent workers + straggler model."""
+
+    def __init__(self, cfg: RuntimeConfig,
+                 sink: Callable[[TaskResult], None],
+                 rng: Optional[np.random.Generator] = None):
+        self._cfg = cfg
+        self.straggler = StragglerModel(
+            cfg, rng if rng is not None else np.random.default_rng(cfg.seed))
+        devices = None
+        if cfg.use_jax_devices:
+            import jax
+            devices = jax.devices()
+        self.workers = []
+        for p in range(cfg.num_workers):
+            compute = (_jax_compute(devices[p % len(devices)])
+                       if devices else _host_compute)
+            self.workers.append(Worker(p, sink, compute))
+
+    def start(self) -> None:
+        for w in self.workers:
+            w.start()
+
+    def dispatch_round(self, ctx, X: np.ndarray, Y: np.ndarray,
+                      kappa: np.ndarray) -> None:
+        """Assign the round's T coded tasks: worker p gets a contiguous
+        ``kappa_p``-slice of the codeword, with per-task injected delays."""
+        offsets = np.concatenate([[0], np.cumsum(kappa)])
+        for p, w in enumerate(self.workers):
+            lo, hi = int(offsets[p]), int(offsets[p + 1])
+            if lo == hi:
+                continue
+            delays = self.straggler.sample(p, hi - lo)
+            w.submit([TaskSpec(ctx=ctx, task_id=t, x=X[t], y=Y[t],
+                               delay=float(delays[t - lo]))
+                      for t in range(lo, hi)])
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        for w in self.workers:
+            w.stop()
+        for w in self.workers:
+            w.join(timeout=timeout)
+
+    @property
+    def busy_seconds(self) -> np.ndarray:
+        return np.asarray([w.busy_seconds for w in self.workers])
+
+    @property
+    def tasks_done(self) -> int:
+        return sum(w.tasks_done for w in self.workers)
+
+    @property
+    def tasks_purged(self) -> int:
+        return sum(w.tasks_purged for w in self.workers)

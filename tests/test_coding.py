@@ -2,11 +2,10 @@
 
 import itertools
 
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core import coding
 from repro.core.layered_matmul import GradientCoder, LayeredCodedMatmul

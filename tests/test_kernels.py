@@ -4,12 +4,11 @@ All kernels run in interpret mode on CPU (the TPU BlockSpecs execute as
 Python), matching the brief's validation recipe.
 """
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core import layering
 from repro.kernels import ops, ref

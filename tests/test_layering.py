@@ -1,10 +1,9 @@
 """Unit + property tests for the paper's core layering math (Definition 1)."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core import layering
 

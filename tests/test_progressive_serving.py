@@ -91,6 +91,28 @@ class TestProgressiveServer:
         assert stats.full_resolution == 0
         assert all(r == 1 for r in stats.released_at_layer)
 
+    def test_deadline_ms_bounds_compute(self, rng):
+        """The wall-clock deadline path accumulates planes incrementally:
+        an already-expired deadline computes ONLY the MSB plane, and a
+        generous one reaches full resolution and matches the non-deadline
+        decode."""
+        cfg, params, server, toks = self._setup(rng)
+        _, caches = server.prefill(toks, max_len=16)
+        out, stats = server.decode(toks[:, -1:], caches, 8, 4,
+                                   deadline_ms=0.0)
+        assert out.shape == (2, 4)
+        assert stats.released_at_layer == [1] * 4
+        assert stats.full_resolution == 0
+
+        _, caches = server.prefill(toks, max_len=16)
+        out_full, stats_full = server.decode(toks[:, -1:], caches, 8, 4,
+                                             deadline_ms=1e9)
+        assert stats_full.released_at_layer == [server.m] * 4
+        _, caches = server.prefill(toks, max_len=16)
+        out_ref, _ = server.decode(toks[:, -1:], caches, 8, 4)
+        np.testing.assert_array_equal(np.asarray(out_full),
+                                      np.asarray(out_ref))
+
     def test_deeper_budget_closer_to_full(self, rng):
         """Fraction of tokens agreeing with the full-resolution decode
         increases with the layer budget (the paper's quality/deadline

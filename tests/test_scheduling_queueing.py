@@ -1,9 +1,8 @@
 """Eq.(1) load balancing + eqs.(2)-(4) G/G/1 bounds + simulator behaviour."""
 
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core import queueing, scheduling, simulator
 

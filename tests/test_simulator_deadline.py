@@ -1,0 +1,99 @@
+"""Deadline semantics of the §IV event simulator.
+
+The paper's termination rule: a running job is cut at
+``t_term = max(service_start + deadline, next_job_arrival)`` only when it
+has not finished by then — so termination requires BOTH the compute time
+to exceed the deadline AND a queued successor.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import simulator
+
+
+def _cfg(**kw):
+    base = dict(mu=(385.95, 650.92, 373.40, 415.75, 373.98),
+                arrival_rate=0.01, k=1000, complexity=50.0, m=2,
+                omega=1.06)
+    base.update(kw)
+    return simulator.SystemConfig(**base)
+
+
+class TestTerminationRule:
+    def test_deadline_excess_alone_does_not_terminate(self):
+        """With arrivals so sparse that no successor is ever queued when a
+        job overruns, a deadline far below the compute time terminates
+        nothing: t_term = max(start + deadline, next_arrival) waits for
+        the successor."""
+        cfg = _cfg(arrival_rate=1e-6)   # interarrival ~1e6 >> service time
+        res = simulator.simulate(cfg, 50, layered=True, deadline=1e-3,
+                                 seed=0)
+        assert res.layer_compute[:, -1].min() > 1e-3  # deadline IS exceeded
+        assert not res.terminated.any()
+        assert res.success.all()
+
+    def test_queued_successor_alone_does_not_terminate(self):
+        """A generous deadline never terminates, no matter how congested
+        the queue is."""
+        cfg = _cfg(arrival_rate=10.0)   # every job has a queued successor
+        res = simulator.simulate(cfg, 50, layered=True, deadline=1e9,
+                                 seed=0)
+        assert not res.terminated.any()
+        assert res.success.all()
+
+    def test_both_conditions_terminate(self):
+        cfg = _cfg(arrival_rate=10.0)
+        res = simulator.simulate(cfg, 200, layered=True, deadline=1e-3,
+                                 seed=0)
+        assert res.terminated.any()
+
+    def test_last_job_never_terminated(self):
+        """No successor can ever queue behind the final job."""
+        cfg = _cfg(arrival_rate=10.0)
+        res = simulator.simulate(cfg, 100, layered=True, deadline=1e-3,
+                                 seed=1)
+        assert res.terminated[:-1].any()
+        assert not res.terminated[-1]
+        assert res.success[-1].all()
+
+    def test_termination_at_next_arrival_not_before(self):
+        """When the deadline expires before the successor arrives, the job
+        keeps computing until the arrival: ends >= the successor's
+        arrival time for every terminated job."""
+        cfg = _cfg(arrival_rate=0.005)
+        res = simulator.simulate(cfg, 300, layered=True, deadline=1.0,
+                                 seed=2)
+        term = np.flatnonzero(res.terminated)
+        assert term.size > 0
+        next_arrivals = res.arrivals[term + 1]   # last job never terminates
+        assert np.all(res.ends[term] >= next_arrivals - 1e-9)
+        assert np.all(res.ends[term] >= res.starts[term] + 1.0 - 1e-9)
+
+
+class TestPaperRegime:
+    def test_resolution0_success_rate_is_one(self):
+        """Paper §IV regime (Fig. 3b working point): the deadline kills
+        the final resolution for a visible fraction of jobs, yet the
+        first resolution *always* arrives."""
+        cfg = _cfg(omega=1.018)
+        res = simulator.simulate(cfg, 2000, layered=True, deadline=10.0,
+                                 seed=0)
+        sr = res.success_rate()
+        assert sr[0] == pytest.approx(1.0)
+        assert sr[-1] < 1.0                      # deadline binds
+        assert np.all(np.diff(sr) <= 1e-12)      # MSB-first monotone
+
+    def test_layered_beats_unlayered_under_deadline(self):
+        cfg = _cfg(omega=1.018)
+        lay = simulator.simulate(cfg, 1000, layered=True, deadline=10.0,
+                                 seed=0)
+        unlay = simulator.simulate(cfg, 1000, layered=False, deadline=10.0,
+                                   seed=0)
+        assert lay.success_rate()[0] > unlay.success_rate()[0]
+
+    def test_mean_delay_ordered_msb_first(self):
+        cfg = _cfg()
+        res = simulator.simulate(cfg, 1000, layered=True, seed=0)
+        md = res.mean_delay()
+        assert np.all(np.diff(md) > 0)
