@@ -1,0 +1,160 @@
+"""Micro-benchmarks for the master's per-round coding hot path.
+
+Three measurements, each new-vs-legacy so the speedup is measured, not
+asserted:
+
+  1. float decode — cached :class:`~repro.core.coding.DecodePlan`
+     (indexed Vandermonde + cached solve operator + vectorized block
+     reassembly) vs the pre-plan path (``np.vander`` + ``np.linalg.solve``
+     + Python concatenate loop per fuse);
+  2. float encode — cached per-geometry encode basis vs rebuilding the
+     point-power matrices on every round;
+  3. gfp encode — vectorized ``_mod_combine`` (einsum digit accumulation)
+     vs the former per-plane Python loop.
+
+Run:  PYTHONPATH=src python benchmarks/bench_coding_hotpath.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import coding
+
+
+def _bench(fn, iters: int) -> float:
+    fn()                       # warm caches / BLAS
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+# -- legacy reference implementations (the pre-DecodePlan hot path) ---------
+
+def _legacy_float_decode(code, task_ids, results):
+    ids = list(task_ids)[: code.k]
+    res = np.asarray(results)[: code.k]
+    pts = code.points()[np.asarray(ids)]
+    V = np.vander(pts, N=code.k, increasing=True)
+    coeffs = np.linalg.solve(V, res.reshape(code.k, -1))
+    coeffs = coeffs.reshape(code.k, *res.shape[1:])
+    rows = []
+    for r in range(code.n1):
+        cols = [coeffs[r + s * code.n1] for s in range(code.n2)]
+        rows.append(np.concatenate(cols, axis=1))
+    return np.concatenate(rows, axis=0)
+
+
+def _legacy_float_basis(code):
+    pts = code.points()
+    va = np.stack([pts**r for r in range(code.n1)], 0)
+    vb = np.stack([pts ** (s * code.n1) for s in range(code.n2)], 0)
+    return va, vb
+
+
+def _legacy_mod_combine(blocks, vand, p):
+    n = blocks.shape[0]
+    vh, vl = vand >> np.uint64(16), vand & np.uint64(0xFFFF)
+    bh, bl = blocks >> np.uint64(16), blocks & np.uint64(0xFFFF)
+    two16, two32 = (1 << 16) % p, (1 << 32) % p
+    out = np.zeros((vand.shape[1],) + blocks.shape[1:], dtype=np.uint64)
+    for r in range(n):
+        hh = (bh[r][None] * vh[r][:, None, None]) % p
+        hl = (bh[r][None] * vl[r][:, None, None]) % p
+        lh = (bl[r][None] * vh[r][:, None, None]) % p
+        ll = (bl[r][None] * vl[r][:, None, None]) % p
+        term = (hh * two32 + (hl + lh) * two16 + ll) % p
+        out = (out + term) % p
+    return out
+
+
+def run(iters: int = 2000, K: int = 64, M: int = 8, N: int = 8,
+        seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    report = {}
+
+    # 1. float decode: plan vs legacy, identical inputs
+    code = coding.PolynomialCode(n1=2, n2=2, omega=1.5)
+    a = rng.integers(0, 255, size=(K, M)).astype(np.float64)
+    b = rng.integers(0, 255, size=(K, N)).astype(np.float64)
+    X, Y = code.encode(a, b)
+    ids = [5, 0, 3, 1]         # out-of-order arrivals, like a real fuse
+    res = np.stack([X[t].T @ Y[t] for t in ids])
+    t_plan = _bench(lambda: code.decode(ids, res), iters)
+    t_leg = _bench(lambda: _legacy_float_decode(code, ids, res), iters)
+    np.testing.assert_allclose(code.decode(ids, res),
+                               _legacy_float_decode(code, ids, res),
+                               rtol=1e-9, atol=1e-9)
+    report["float_decode"] = {"plan_us": t_plan * 1e6,
+                              "legacy_us": t_leg * 1e6,
+                              "speedup": t_leg / t_plan}
+
+    # 2. float encode: cached basis + per-side amortization vs per-round
+    # full rebuild.  The pipelined master memoizes each operand side, so
+    # one job's m**2 rounds cost m A-side + m B-side encodes total.
+    m = 2                      # the default RuntimeConfig plane count
+    t_enc = _bench(lambda: code.encode(a, b), iters)
+    t_side = _bench(lambda: (code.encode_a(a), code.encode_b(b)), iters)
+
+    def legacy_encode():
+        va, vb = _legacy_float_basis(code)
+        blocks_a = np.stack(np.split(a, code.n1, axis=1), axis=0)
+        blocks_b = np.stack(np.split(b, code.n2, axis=1), axis=0)
+        X = np.einsum("rkm,rt->tkm", blocks_a, va)
+        Y = np.einsum("skn,st->tkn", blocks_b, vb)
+        return X, Y
+
+    t_enc_leg = _bench(legacy_encode, iters)
+    t_enc_round = t_side * m / (m * m)     # amortized per round
+    report["float_encode"] = {"cached_us": t_enc * 1e6,
+                              "legacy_us": t_enc_leg * 1e6,
+                              "amortized_per_round_us": t_enc_round * 1e6,
+                              "speedup": t_enc_leg / t_enc}
+
+    # 3. gfp encode: vectorized _mod_combine vs per-plane Python loop
+    gcode = coding.PolynomialCode(n1=4, n2=1, omega=1.5, mode="gfp")
+    ga = rng.integers(0, coding.MERSENNE_P, size=(K, 8),
+                      dtype=np.uint64)
+    blocks = np.stack(np.split(ga, 4, axis=1), axis=0)
+    va, _ = coding._encode_basis(gcode)
+    new = coding._mod_combine(blocks, va, gcode.p)
+    old = _legacy_mod_combine(blocks, va, gcode.p)
+    np.testing.assert_array_equal(new, old)
+    t_new = _bench(lambda: coding._mod_combine(blocks, va, gcode.p), iters)
+    t_old = _bench(lambda: _legacy_mod_combine(blocks, va, gcode.p), iters)
+    report["gfp_mod_combine"] = {"vectorized_us": t_new * 1e6,
+                                 "legacy_us": t_old * 1e6,
+                                 "speedup": t_old / t_new}
+
+    # the ISSUE's headline: master-side per-round overhead (encode+decode)
+    per_round_new = t_enc_round + t_plan
+    per_round_leg = t_enc_leg + t_leg
+    report["per_round_encode_plus_decode"] = {
+        "new_us": per_round_new * 1e6, "legacy_us": per_round_leg * 1e6,
+        "speedup": per_round_leg / per_round_new}
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iters", type=int, default=2000)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    report = run(iters=args.iters)
+    for name, row in report.items():
+        vals = "  ".join(f"{k}={v:.2f}" for k, v in row.items())
+        print(f"{name:>28}: {vals}")
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(report, indent=2))
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import simulator
 from repro.runtime import (RuntimeConfig, delay_table, format_delay_table,
-                           run_jobs)
+                           format_stage_table, run_jobs)
 
 MU = (385.95, 650.92, 373.40, 415.75, 373.98)   # the paper's §IV cluster
 
@@ -67,6 +67,8 @@ def run_scenario(spec: dict, *, sim_jobs: int) -> dict:
           f"max_verify_rel_err={max_err}")
     print("measured:")
     print(format_delay_table(rows))
+    print("per-stage master pipeline timings:")
+    print(format_stage_table(result))
     print(f"simulated ({sim_jobs} jobs):")
     print(format_delay_table(sim_rows))
     return {
@@ -83,6 +85,11 @@ def run_scenario(spec: dict, *, sim_jobs: int) -> dict:
         "max_verify_rel_error": float(errs.max()) if errs.size else None,
         "measured_delay_per_resolution": rows,
         "simulated_delay_per_resolution": sim_rows,
+        "stage_seconds": {k: round(float(v), 6)
+                          for k, v in (result.stage_seconds or {}).items()},
+        "stage_rounds": int(result.stage_rounds),
+        "master_overhead_us_per_round": round(
+            result.per_round_overhead() * 1e6, 2),
         "wall_seconds": round(wall, 2),
     }
 

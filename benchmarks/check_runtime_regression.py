@@ -1,0 +1,78 @@
+"""CI gate: fail if the runtime bench regressed vs the committed baseline.
+
+Compares a fresh ``BENCH_runtime.json`` against
+``benchmarks/BENCH_runtime.baseline.json`` scenario by scenario and exits
+non-zero if any scenario's mean resolution-0 delay regressed by more than
+``--max-regress`` (default 25%).  Resolution 0 is the paper's headline —
+it carries the master's per-round overhead almost undiluted, so a
+pipeline/decode-plan regression shows up here first.
+
+The committed baseline encodes absolute wall-clock delays, so it is only
+comparable across machines of the same class: regenerate it
+(``bench_runtime.py --jobs 200 --out benchmarks/BENCH_runtime.baseline.json``)
+whenever the CI runner class changes, and treat a uniform shift across
+all three scenarios as a machine change, not a code regression.
+
+Run:  PYTHONPATH=src python benchmarks/check_runtime_regression.py \
+          --new BENCH_runtime.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+BASELINE = pathlib.Path(__file__).parent / "BENCH_runtime.baseline.json"
+
+
+def res0_mean_delay(scenario: dict) -> float:
+    rows = scenario["measured_delay_per_resolution"]
+    row = next(r for r in rows if r["resolution"] == 0)
+    return float(row["mean_delay"])
+
+
+def compare(baseline: dict, new: dict, max_regress: float) -> list[str]:
+    """Human-readable failures; empty when everything is within budget."""
+    base_by_name = {s["name"]: s for s in baseline["scenarios"]}
+    failures = []
+    for scenario in new["scenarios"]:
+        name = scenario["name"]
+        base = base_by_name.get(name)
+        if base is None:
+            print(f"[check] {name}: no baseline scenario, skipping")
+            continue
+        b, n = res0_mean_delay(base), res0_mean_delay(scenario)
+        ratio = n / b if b > 0 else float("inf")
+        status = "OK" if ratio <= 1.0 + max_regress else "REGRESSED"
+        print(f"[check] {name}: res0 mean delay {b * 1e3:.2f} ms -> "
+              f"{n * 1e3:.2f} ms ({ratio:.2f}x)  {status}")
+        if ratio > 1.0 + max_regress:
+            failures.append(
+                f"{name}: res0 mean delay {ratio:.2f}x baseline "
+                f"(budget {1.0 + max_regress:.2f}x)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--new", default="BENCH_runtime.json",
+                    help="fresh bench artifact to validate")
+    ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="allowed fractional regression (0.25 = +25%%)")
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())
+    new = json.loads(pathlib.Path(args.new).read_text())
+    failures = compare(baseline, new, args.max_regress)
+    if failures:
+        print("[check] FAIL:\n  " + "\n  ".join(failures), file=sys.stderr)
+        return 1
+    print("[check] all scenarios within regression budget")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

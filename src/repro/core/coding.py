@@ -30,15 +30,25 @@ data-parallel gradient path (see ``repro/core/layered_matmul.py``).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 import math
+import threading
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["PolynomialCode", "MDSCode", "modmatmul", "MERSENNE_P"]
+try:
+    from scipy.linalg import lu_factor, lu_solve
+    _HAVE_SCIPY = True
+except ImportError:  # pragma: no cover - scipy is a baked-in dep
+    _HAVE_SCIPY = False
+
+__all__ = ["PolynomialCode", "MDSCode", "DecodePlan", "modmatmul",
+           "MERSENNE_P"]
 
 MERSENNE_P = (1 << 31) - 1
 
@@ -101,6 +111,156 @@ def _vandermonde_inv_mod(points: Sequence[int], p: int) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Decode plans: the per-code precomputation + per-arrival-set operator cache
+# ---------------------------------------------------------------------------
+
+class DecodePlan:
+    """Precomputed decode operators for one fixed codeword geometry.
+
+    Built once per code: the full ``(T, k)`` Vandermonde over the code's
+    evaluation points (Chebyshev in float mode).  Each any-``k`` decode
+    then only *indexes* its k rows and applies a solve operator — float
+    mode an LU factorization (``scipy.linalg.lu_factor``; cached inverse
+    without scipy), gfp mode the exact ``_vandermonde_inv_mod`` — kept in
+    a bounded LRU keyed by the sorted arrival-ID tuple.  The same set of
+    fast workers fusing round after round therefore pays the
+    factorization once and a single small GEMM per round, instead of the
+    per-fuse ``np.vander`` + ``np.linalg.solve`` rebuild.
+
+    Thread-safe; ``cache_info()`` exposes hit/miss/eviction counters for
+    profiling and tests.
+    """
+
+    def __init__(self, points: np.ndarray, k: int, *, mode: str = "float",
+                 p: int = MERSENNE_P, cache_size: int = 128):
+        if cache_size < 1:
+            raise ValueError(f"cache_size must be >= 1, got {cache_size}")
+        self.k = k
+        self.mode = mode
+        self.p = p
+        self.points = np.asarray(points)
+        if self.points.shape[0] < k:
+            raise ValueError(f"{self.points.shape[0]} points for k={k}")
+        if mode == "float":
+            # one T x k Vandermonde for the whole codeword, built once
+            self._V = np.vander(self.points.astype(np.float64), N=k,
+                                increasing=True)
+        self.cache_size = cache_size
+        self._cache: collections.OrderedDict[tuple, tuple] = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def _build(self, ids: tuple[int, ...]) -> tuple:
+        idx = np.asarray(ids)
+        if self.mode == "float":
+            V = self._V[idx]
+            # explicit inverse: applying it is a single tiny GEMM (~8x
+            # faster than lu_solve's call overhead) and, with Chebyshev
+            # points, just as accurate up to k ~ 16; beyond that LU's
+            # backward stability starts to matter.
+            if self.k <= 16 or not _HAVE_SCIPY:
+                return ("inv", np.linalg.inv(V))
+            return ("lu", lu_factor(V))
+        return ("gfp", _vandermonde_inv_mod(
+            [int(x) for x in self.points[idx]], self.p))
+
+    def operator(self, ids: tuple[int, ...]) -> tuple:
+        """The (cached) solve operator for one sorted arrival-ID tuple."""
+        with self._lock:
+            op = self._cache.get(ids)
+            if op is not None:
+                self.hits += 1
+                self._cache.move_to_end(ids)
+                return op
+        op = self._build(ids)     # factorize outside the lock
+        with self._lock:
+            self.misses += 1
+            self._cache[ids] = op
+            self._cache.move_to_end(ids)
+            while len(self._cache) > self.cache_size:
+                self._cache.popitem(last=False)
+                self.evictions += 1
+        return op
+
+    def solve(self, task_ids: Sequence[int], results, *,
+              use_cache: bool = True) -> np.ndarray:
+        """Polynomial coefficients ``(k, ...)`` from any k task results.
+
+        Arrival order is canonicalized to sorted-ID order (a permutation
+        of the linear system's equations) so it never fragments the
+        cache.  ``use_cache=False`` rebuilds the operator fresh — same
+        arithmetic, bit-identical output — the reference path the
+        property tests compare against.
+        """
+        ids = [int(i) for i in list(task_ids)[: self.k]]
+        if len(ids) < self.k:
+            raise ValueError(
+                f"need {self.k} task results to decode, got {len(ids)}")
+        res = np.asarray(results)[: self.k]
+        if all(a < b for a, b in zip(ids, ids[1:])):
+            key = tuple(ids)
+            flat = res.reshape(self.k, -1)
+        else:
+            order = sorted(range(self.k), key=ids.__getitem__)
+            key = tuple(ids[i] for i in order)
+            flat = res[order].reshape(self.k, -1)
+        kind, data = self.operator(key) if use_cache else self._build(key)
+        if kind == "lu":
+            coeffs = lu_solve(data, flat)
+        elif kind == "lu+inv":
+            coeffs = lu_solve(data[0], flat)   # LU stays the solve path
+        elif kind == "inv":
+            coeffs = data @ flat
+        else:
+            coeffs = (data @ flat.astype(object)) % self.p
+        return coeffs.reshape(self.k, *res.shape[1:])
+
+    def inverse(self, ids: tuple[int, ...]) -> np.ndarray:
+        """Explicit inverse for a sorted ID tuple (cached operator).
+
+        For callers that apply the operator elsewhere (e.g. a device
+        tensordot) instead of solving on the host.  An "lu" operator is
+        materialized once and the cache entry is upgraded in place, so
+        repeat decodes of the same ID set don't re-pay the solve (later
+        host solves for that set then apply the inverse too).
+        """
+        kind, data = self.operator(ids)
+        if kind == "lu":
+            inv = lu_solve(data, np.eye(self.k))
+            with self._lock:
+                if ids in self._cache:
+                    # keep BOTH: LU stays the (more stable) host solve
+                    # path, the inverse serves device-side application
+                    self._cache[ids] = ("lu+inv", (data, inv))
+            return inv
+        if kind == "lu+inv":
+            return data[1]
+        return data            # "inv" and "gfp" both store the inverse
+
+    def cache_info(self) -> dict:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "currsize": len(self._cache),
+                    "maxsize": self.cache_size}
+
+
+def _assemble_blocks(coeffs: np.ndarray, n1: int, n2: int) -> np.ndarray:
+    """Block matrix from coefficients: slot ``r + s*n1`` -> block (r, s).
+
+    One transpose/reshape instead of the former Python concatenate loop;
+    works for float and object (GF(p)) arrays alike.
+    """
+    k, mb, nb = coeffs.shape
+    return (coeffs.reshape(n2, n1, mb, nb)
+            .transpose(1, 2, 0, 3)
+            .reshape(n1 * mb, n2 * nb))
+
+
+# ---------------------------------------------------------------------------
 # Polynomial code
 # ---------------------------------------------------------------------------
 
@@ -145,6 +305,11 @@ class PolynomialCode:
             return np.cos((2 * i + 1) * np.pi / (2 * t)).astype(np.float64)
         return np.arange(1, self.num_tasks + 1, dtype=np.int64)
 
+    # -- precomputed plans ----------------------------------------------------
+    def plan(self) -> DecodePlan:
+        """The code's decode plan (one per geometry, process-wide)."""
+        return _decode_plan(self)
+
     # -- encoding --------------------------------------------------------------
     def _split(self, mat, nblocks: int):
         K, M = mat.shape
@@ -152,6 +317,28 @@ class PolynomialCode:
             raise ValueError(f"second dim {M} not divisible by {nblocks}")
         xp = np if isinstance(mat, np.ndarray) else jnp
         return xp.stack(xp.split(mat, nblocks, axis=1), axis=0)  # (n, K, M/n)
+
+    def encode_a(self, a: np.ndarray) -> np.ndarray:
+        """Coded blocks ``X (T, K, M/n1)`` of operand A alone (host float64).
+
+        Encoding is per operand *side*: a runtime driving the ``m**2``
+        plane-pair rounds of one job only needs ``m`` A-side and ``m``
+        B-side encodes total, reusing each coded side across every round
+        that pairs it — not ``m**2`` full ``encode`` calls.
+        """
+        if self.mode != "float":
+            raise ValueError("encode_a is the float-mode host fast path")
+        va, _ = _encode_basis(self)
+        blocks = self._split(a, self.n1)
+        return np.einsum("rkm,rt->tkm", blocks.astype(np.float64), va)
+
+    def encode_b(self, b: np.ndarray) -> np.ndarray:
+        """Coded blocks ``Y (T, K, N/n2)`` of operand B alone (host float64)."""
+        if self.mode != "float":
+            raise ValueError("encode_b is the float-mode host fast path")
+        _, vb = _encode_basis(self)
+        blocks = self._split(b, self.n2)
+        return np.einsum("skn,st->tkn", blocks.astype(np.float64), vb)
 
     def encode(self, a, b):
         """Returns coded task inputs ``X (T, K, M/n1)`` and ``Y (T, K, N/n2)``.
@@ -161,29 +348,19 @@ class PolynomialCode:
         runtime master's per-round hot path); JAX operands go through the
         device einsum (float32 unless jax_enable_x64).
         """
+        if (self.mode == "float" and isinstance(a, np.ndarray)
+                and isinstance(b, np.ndarray)):
+            return self.encode_a(a), self.encode_b(b)
         blocks_a = self._split(a, self.n1)
         blocks_b = self._split(b, self.n2)
-        pts = self.points()
+        va, vb = _encode_basis(self)     # built once per geometry
         if self.mode == "float":
-            va = np.stack([pts**r for r in range(self.n1)], 0)
-            vb = np.stack([pts ** (s * self.n1) for s in range(self.n2)], 0)
-            if isinstance(a, np.ndarray) and isinstance(b, np.ndarray):
-                X = np.einsum("rkm,rt->tkm",
-                              blocks_a.astype(np.float64), va)
-                Y = np.einsum("skn,st->tkn",
-                              blocks_b.astype(np.float64), vb)
-                return X, Y
             dtype = (jnp.float64 if jax.config.jax_enable_x64
                      else jnp.float32)
             va, vb = jnp.asarray(va, dtype), jnp.asarray(vb, dtype)
             X = jnp.einsum("rkm,rt->tkm", blocks_a.astype(dtype), va)
             Y = jnp.einsum("skn,st->tkn", blocks_b.astype(dtype), vb)
             return X, Y
-        # exact GF(p): encode with Python-int powers reduced mod p
-        va = np.array([[pow(int(pt), r, self.p) for pt in pts]
-                       for r in range(self.n1)], dtype=np.uint64)
-        vb = np.array([[pow(int(pt), s * self.n1, self.p) for pt in pts]
-                       for s in range(self.n2)], dtype=np.uint64)
         ba = np.asarray(blocks_a, dtype=np.uint64)
         bb = np.asarray(blocks_b, dtype=np.uint64)
         # accumulate n1 (resp. n2) products of (<p)*(<p): split coefficient
@@ -216,47 +393,56 @@ class PolynomialCode:
         Returns:
           (M, N) product.
         """
-        ids = list(task_ids)[: self.k]
-        if len(ids) < self.k:
-            raise ValueError(
-                f"need {self.k} task results to decode, got {len(ids)}")
-        res = np.asarray(results)[: self.k]
-        pts = self.points()[np.asarray(ids)]
-        if self.mode == "float":
-            V = np.vander(pts, N=self.k, increasing=True)  # (k, k)
-            coeffs = np.linalg.solve(V, res.reshape(self.k, -1))
-            coeffs = coeffs.reshape(self.k, *res.shape[1:])
-        else:
-            Vinv = _vandermonde_inv_mod([int(x) for x in pts], self.p)
-            flat = res.reshape(self.k, -1).astype(object)
-            coeffs = (Vinv @ flat) % self.p
-            coeffs = coeffs.reshape(self.k, *res.shape[1:])
+        coeffs = self.plan().solve(task_ids, results)
         # coefficient (r, s) of x^(r + s*n1) is (A^r).T @ B^s
-        rows = []
-        for r in range(self.n1):
-            cols = [coeffs[r + s * self.n1] for s in range(self.n2)]
-            rows.append(np.concatenate(cols, axis=1))
-        out = np.concatenate(rows, axis=0)
+        out = _assemble_blocks(coeffs, self.n1, self.n2)
         if self.mode == "gfp":
             return _lift_gfp(out, self.p)
         return out
 
 
+# bounded: a long-lived process retuning the geometry (the ROADMAP's
+# adaptive-omega loop, parameter sweeps) must not accumulate plans forever
+@functools.lru_cache(maxsize=64)
+def _decode_plan(code: PolynomialCode) -> DecodePlan:
+    return DecodePlan(code.points(), code.k, mode=code.mode, p=code.p)
+
+
+@functools.lru_cache(maxsize=64)
+def _encode_basis(code: PolynomialCode) -> tuple[np.ndarray, np.ndarray]:
+    """Per-geometry encode matrices ``va (n1, T)``, ``vb (n2, T)``."""
+    pts = code.points()
+    if code.mode == "float":
+        va = np.stack([pts**r for r in range(code.n1)], 0)
+        vb = np.stack([pts ** (s * code.n1) for s in range(code.n2)], 0)
+        return va, vb
+    # exact GF(p): Python-int powers reduced mod p
+    va = np.array([[pow(int(pt), r, code.p) for pt in pts]
+                   for r in range(code.n1)], dtype=np.uint64)
+    vb = np.array([[pow(int(pt), s * code.n1, code.p) for pt in pts]
+                   for s in range(code.n2)], dtype=np.uint64)
+    return va, vb
+
+
 def _mod_combine(blocks: np.ndarray, vand: np.ndarray, p: int) -> np.ndarray:
-    """``sum_r blocks[r] * vand[r, t] mod p`` without uint64 overflow."""
+    """``sum_r blocks[r] * vand[r, t] mod p`` without uint64 overflow.
+
+    Single einsum per 16-bit digit pair: each digit product is < 2**32, so
+    the raw uint64 accumulation over all n planes is exact for n < 2**26 —
+    one reduction replaces the former per-plane Python loop.
+    """
     n = blocks.shape[0]
+    if n >= (1 << 26):
+        raise ValueError(f"too many planes ({n}) for uint64 accumulation")
     vh, vl = vand >> np.uint64(16), vand & np.uint64(0xFFFF)
     bh, bl = blocks >> np.uint64(16), blocks & np.uint64(0xFFFF)
-    two16, two32 = (1 << 16) % p, (1 << 32) % p
-    out = np.zeros((vand.shape[1],) + blocks.shape[1:], dtype=np.uint64)
-    for r in range(n):  # n is tiny (n1 or n2)
-        hh = (bh[r][None] * vh[r][:, None, None]) % p
-        hl = (bh[r][None] * vl[r][:, None, None]) % p
-        lh = (bl[r][None] * vh[r][:, None, None]) % p
-        ll = (bl[r][None] * vl[r][:, None, None]) % p
-        term = (hh * two32 + (hl + lh) * two16 + ll) % p
-        out = (out + term) % p
-    return out
+    hh = np.einsum("rkm,rt->tkm", bh, vh) % p
+    hl = np.einsum("rkm,rt->tkm", bh, vl)
+    lh = np.einsum("rkm,rt->tkm", bl, vh)
+    ll = np.einsum("rkm,rt->tkm", bl, vl) % p
+    two16 = np.uint64((1 << 16) % p)
+    two32 = np.uint64((1 << 32) % p)
+    return (hh * two32 % p + (hl + lh) % p * two16 % p + ll) % p
 
 
 def _lift_gfp(x_obj: np.ndarray, p: int) -> np.ndarray:
@@ -301,12 +487,31 @@ class MDSCode:
         G = self.generator(shards.dtype)
         return jnp.tensordot(G, shards, axes=1)
 
+    def plan(self) -> DecodePlan:
+        """The code's decode plan (one per geometry, process-wide)."""
+        return _mds_plan(self)
+
     def decode(self, ids: Sequence[int], codewords: jax.Array) -> jax.Array:
-        """Any k codewords (k, ...) + their ids -> shards (k, ...)."""
-        ids = list(ids)[: self.k]
+        """Any k codewords (k, ...) + their ids -> shards (k, ...).
+
+        NumPy codewords decode on the host in float64 through the plan;
+        JAX codewords stay on device (jit-traceable: ids are static, only
+        the cached inverse crosses to the device) as before.
+        """
+        ids = [int(i) for i in list(ids)[: self.k]]
         if len(ids) < self.k:
             raise ValueError(f"need {self.k} codewords, got {len(ids)}")
-        pts = self.points()[np.asarray(ids)]
-        V = np.vander(pts, N=self.k, increasing=True)
-        Vinv = jnp.asarray(np.linalg.inv(V), codewords.dtype)
-        return jnp.tensordot(Vinv, codewords[: self.k], axes=1)
+        if isinstance(codewords, np.ndarray):
+            shards = self.plan().solve(ids, codewords)
+            return jnp.asarray(shards.astype(codewords.dtype))
+        order = sorted(range(self.k), key=ids.__getitem__)
+        Vinv = self.plan().inverse(tuple(ids[i] for i in order))
+        cw = codewords[: self.k]
+        if order != list(range(self.k)):
+            cw = cw[jnp.asarray(order)]
+        return jnp.tensordot(jnp.asarray(Vinv, codewords.dtype), cw, axes=1)
+
+
+@functools.lru_cache(maxsize=64)
+def _mds_plan(code: MDSCode) -> DecodePlan:
+    return DecodePlan(code.points(), code.k)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import layering
 
@@ -97,5 +98,9 @@ def layered_matmul_kernel_call(a_planes: jax.Array, b_planes: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((L, bm, bn), lambda mi, ni, ki: (0, mi, ni)),
         out_shape=jax.ShapeDtypeStruct((L, M, N), jnp.int32),
+        # M/N output tiles are independent (megacore-parallel); the K axis
+        # accumulates into the output tile and must stay sequential.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_planes, b_planes)

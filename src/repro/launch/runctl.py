@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.core import simulator
 from repro.runtime import (RuntimeConfig, delay_table, format_delay_table,
-                           run_jobs)
+                           format_stage_table, run_jobs)
 
 __all__ = ["main", "build_config", "summarize"]
 
@@ -70,6 +70,9 @@ def summarize(cfg: RuntimeConfig, result) -> dict:
                                for u in result.utilization],
         "stale_results": int(result.stale_results),
         "wall_elapsed": float(result.wall_elapsed),
+        "stage_seconds": {k: float(v)
+                          for k, v in (result.stage_seconds or {}).items()},
+        "stage_rounds": int(result.stage_rounds),
     }
     if result.verify_errors is not None:
         finite = result.verify_errors[np.isfinite(result.verify_errors)]
@@ -111,6 +114,9 @@ def main(argv=None) -> int:
     ap.add_argument("--N", type=int, default=8)
     ap.add_argument("--no-verify", action="store_true",
                     help="skip decode-vs-oracle verification")
+    ap.add_argument("--profile", action="store_true",
+                    help="print the per-stage master pipeline breakdown "
+                         "(prep/encode/dispatch/wait/decode/publish)")
     ap.add_argument("--compare-sim", action="store_true",
                     help="also run the §IV simulator + eq.(4) bounds on the "
                          "same configuration")
@@ -139,6 +145,9 @@ def main(argv=None) -> int:
                   f"max rel error {finite.max():.2e}")
     print("[runctl] measured delay per resolution (seconds):")
     print(format_delay_table(delay_table(result)))
+    if args.profile:
+        print("[runctl] per-stage master pipeline breakdown:")
+        print(format_stage_table(result))
 
     if args.compare_sim:
         scfg = cfg.to_system_config()

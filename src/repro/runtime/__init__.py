@@ -19,16 +19,17 @@ Quickstart::
 
 from repro.runtime.fusion import FusionNode, LayeredResult, RoundFusion
 from repro.runtime.master import Master, make_jobs, run_jobs
-from repro.runtime.metrics import (RuntimeResult, delay_table,
-                                   format_delay_table)
-from repro.runtime.tasks import (JobSpec, RoundContext, RuntimeConfig,
-                                 TaskResult, TaskSpec)
+from repro.runtime.metrics import (STAGES, RuntimeResult, delay_table,
+                                   format_delay_table, format_stage_table)
+from repro.runtime.tasks import (JobSpec, RoundBatch, RoundContext,
+                                 RuntimeConfig, TaskResult)
 from repro.runtime.worker import StragglerModel, Worker, WorkerPool
 
 __all__ = [
-    "RuntimeConfig", "JobSpec", "RoundContext", "TaskSpec", "TaskResult",
+    "RuntimeConfig", "JobSpec", "RoundContext", "RoundBatch", "TaskResult",
     "Worker", "WorkerPool", "StragglerModel",
     "FusionNode", "RoundFusion", "LayeredResult",
     "Master", "make_jobs", "run_jobs",
     "RuntimeResult", "delay_table", "format_delay_table",
+    "format_stage_table", "STAGES",
 ]

@@ -127,6 +127,9 @@ class LayeredResult:
         return self._events[l].wait(timeout=timeout)
 
     def resolution(self, l: int) -> np.ndarray:
+        # read strictly under the ready event: mark_resolution stores the
+        # value *before* setting the event, so a set event is the happens-
+        # before edge that makes the read safe against the publisher.
         if not self._events[l].is_set():
             raise RuntimeError(f"resolution {l} not ready")
         return self._values[l]
@@ -135,12 +138,16 @@ class LayeredResult:
         return self._ready_at[l]
 
     def best_resolution(self) -> int:
-        """Highest ready resolution index, or -1 if none."""
-        best = -1
-        for l in range(self.num_layers):
+        """Highest ready resolution index, or -1 if none.
+
+        Scans from the top: layers publish MSB-first, so the first set
+        event from the top IS the answer — O(1) once any high layer is
+        ready, instead of a full O(L) walk.
+        """
+        for l in range(self.num_layers - 1, -1, -1):
             if self._events[l].is_set():
-                best = l
-        return best
+                return l
+        return -1
 
     def wait_released(self, timeout: Optional[float] = None) -> bool:
         return self._released.wait(timeout=timeout)
@@ -151,4 +158,4 @@ class LayeredResult:
         if best < 0:
             raise RuntimeError(
                 f"job {self.job_id}: no resolution completed")
-        return self._values[best]
+        return self.resolution(best)   # event-guarded read

@@ -18,6 +18,20 @@ mini-job rounds run MSB-first on the worker pool:
    requires BOTH deadline excess AND a queued successor — releasing the
    highest completed resolution.
 
+The per-round loop is *software-pipelined* so the master's own work hides
+behind the in-flight round's worker compute instead of serializing with
+it: round ``r``'s codeword is double-buffered and dispatched, then —
+while the workers chew on it — the master decodes round ``r-1``
+(publishing any completed layer), encodes round ``r+1`` into the spare
+buffer, and, on a job's final round, digit-decomposes the next *queued*
+job's operands.  Purge safety is preserved because each round still owns
+its private :class:`RoundContext`; the §IV termination check still gates
+every dispatch; and decode itself rides on the code's cached
+:class:`~repro.core.coding.DecodePlan` (LRU of per-arrival-set solve
+operators), so the steady-state critical path per round is dispatch +
+fusion wait.  Per-stage wall time is accounted in
+``RuntimeResult.stage_seconds``.
+
 With ``verify=True`` every published resolution is checked against the
 exact layered oracle (``layering.layered_matmul_reference``, the same
 oracle the Pallas kernel in ``repro.kernels.layered_matmul`` is tested
@@ -93,15 +107,11 @@ class Master:
         cb = layering._np_decompose(qb, cfg.m, cfg.d)   # (m, K, N)
         return qa, qb, sa * sb, ca, cb
 
-    def _encode_round(self, ca_i: np.ndarray, cb_j: np.ndarray):
-        """Polynomial-encode one mini-job (host float64 fast path)."""
-        return self._code.encode(np.asarray(ca_i, np.float64),
-                                 np.asarray(cb_j, np.float64))
-
     def _warmup(self, job: JobSpec) -> None:
         """Run one encode/compute/decode off the clock (BLAS/cache warm)."""
         _, _, _, ca, cb = self._prepare(job)
-        X, Y = self._encode_round(ca[0], cb[0])
+        X = self._code.encode_a(np.asarray(ca[0], np.float64))
+        Y = self._code.encode_b(np.asarray(cb[0], np.float64))
         self._code.decode(list(range(self._code.k)),
                           np.stack([X[t].T @ Y[t]
                                     for t in range(self._code.k)]))
@@ -133,6 +143,10 @@ class Master:
         released = np.full(J, -1, dtype=np.int64)
         verify_errors = np.full((J, L), np.nan) if self.verify else None
         futures: list[LayeredResult] = []
+        stage = {name: 0.0 for name in metrics.STAGES}
+        rounds_timed = 0
+        R = len(order)
+        prepared: dict[int, tuple] = {}   # job idx -> pre-decomposed planes
 
         t0 = clock()
         try:
@@ -141,7 +155,12 @@ class Master:
                 if wait > 0:           # idle until the job actually arrives
                     time.sleep(wait)
                 start = clock()
-                qa, qb, scale, ca, cb = self._prepare(job)
+                prep = prepared.pop(j, None)
+                if prep is None:
+                    ts = clock()
+                    prep = self._prepare(job)
+                    stage["prep"] += clock() - ts
+                qa, qb, scale, ca, cb = prep
                 lr = LayeredResult(job.job_id, L)
                 futures.append(lr)
 
@@ -153,26 +172,89 @@ class Master:
                     t_term = max(start + cfg.deadline, next_arrival)
 
                 acc = np.zeros((qa.shape[1], qb.shape[1]), dtype=np.float64)
+                # per-side coded planes, filled on first use: the m**2
+                # rounds need only m A-side + m B-side encodes per job
+                enc_a: dict[int, np.ndarray] = {}
+                enc_b: dict[int, np.ndarray] = {}
+
+                def encode_round(pi, pj):
+                    ts = clock()
+                    Xa = enc_a.get(pi)
+                    if Xa is None:
+                        Xa = enc_a[pi] = code.encode_a(
+                            np.asarray(ca[pi], np.float64))
+                    Yb = enc_b.get(pj)
+                    if Yb is None:
+                        Yb = enc_b[pj] = code.encode_b(
+                            np.asarray(cb[pj], np.float64))
+                    stage["encode"] += clock() - ts
+                    return Xa, Yb
+
+                def finish_round(rf, ridx, l, pi, pj):
+                    """Decode a fused round, publish its layer if last.
+
+                    Runs *behind* the next round's dispatch, so the layer
+                    is timestamped with the round's ``fused_at`` (its k-th
+                    task arrival) — the simulator's order-statistic
+                    semantics — not the later decode instant, keeping the
+                    measured delay free of next-round dispatch cost.
+                    """
+                    ts = clock()
+                    mini = rf.decode(code)
+                    tp = clock()
+                    stage["decode"] += tp - ts
+                    acc[...] += mini * float(1 << ((pi + pj) * cfg.d))
+                    if ridx + 1 == cum[l]:  # layer l's last mini-job fused
+                        lr.mark_resolution(l, acc * scale, rf.fused_at)
+                    stage["publish"] += clock() - tp
+
+                # prime the pipeline: round 0's codeword + injected delays
+                nxt = encode_round(order[0][1], order[0][2])
+                nxt_delays = pool.sample_round_delays(kappa)
+                pending = None        # fused-but-undecoded previous round
                 term = False
                 for ridx, (l, pi, pj) in enumerate(order):
                     if t_term is not None and clock() >= t_term:
-                        term = True   # don't encode/dispatch a dead round
+                        term = True   # don't dispatch a dead round
                         break
                     ctx = RoundContext(job.job_id, ridx)
-                    X, Y = self._encode_round(ca[pi], cb[pj])
                     rf = self.fusion.begin_round(ctx, code.k)
-                    pool.dispatch_round(ctx, X, Y, kappa)
+                    ts = clock()
+                    pool.dispatch_round(ctx, nxt[0], nxt[1], kappa,
+                                        delays=nxt_delays)
+                    stage["dispatch"] += clock() - ts
+                    rounds_timed += 1
+                    nxt = None
+                    # -- overlapped with this round's worker compute: --
+                    # 1. decode the previous round, publish its layer
+                    if pending is not None:
+                        finish_round(*pending)
+                        pending = None
+                    # 2. encode round r+1 + presample its delays into the
+                    #    spare buffer, or (last round) digit-decompose the
+                    #    next *queued* job
+                    if ridx + 1 < R:
+                        _, npi, npj = order[ridx + 1]
+                        nxt = encode_round(npi, npj)
+                        nxt_delays = pool.sample_round_delays(kappa)
+                    elif (j + 1 < J and j + 1 not in prepared
+                          and clock() >= t0 + jobs[j + 1].arrival):
+                        ts = clock()
+                        prepared[j + 1] = self._prepare(jobs[j + 1])
+                        stage["prep"] += clock() - ts
+                    # ---------------------------------------------------
                     timeout = (None if t_term is None
                                else max(0.0, t_term - clock()))
+                    ts = clock()
                     fused = rf.wait(timeout)
+                    stage["wait"] += clock() - ts
                     ctx.purge()        # reclaim the round's stragglers
                     if not fused:
                         term = True
                         break
-                    mini = rf.decode(code)
-                    acc += mini * float(1 << ((pi + pj) * cfg.d))
-                    if ridx + 1 == cum[l]:   # layer l's last mini-job fused
-                        lr.mark_resolution(l, acc * scale, clock())
+                    pending = (rf, ridx, l, pi, pj)
+                if pending is not None:   # drain the decode-behind stage
+                    finish_round(*pending)
                 end = clock()
                 lr.release(terminated=term)
 
@@ -202,7 +284,8 @@ class Master:
             terminated=terminated, kappa=kappa,
             worker_busy=pool.busy_seconds, wall_elapsed=clock() - t0,
             stale_results=self.fusion.stale_results, released=released,
-            verify_errors=verify_errors)
+            verify_errors=verify_errors, stage_seconds=stage,
+            stage_rounds=rounds_timed)
         return result, futures
 
 

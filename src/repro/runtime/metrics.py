@@ -18,7 +18,13 @@ import numpy as np
 
 from repro.core import simulator
 
-__all__ = ["RuntimeResult", "delay_table", "format_delay_table"]
+__all__ = ["RuntimeResult", "delay_table", "format_delay_table",
+           "format_stage_table", "STAGES"]
+
+#: Per-round pipeline stages the master accounts for.  ``wait`` is worker
+#: compute (the master blocks on fusion); everything else is master-side
+#: critical-path overhead the pipelined engine works to hide or shrink.
+STAGES = ("prep", "encode", "dispatch", "wait", "decode", "publish")
 
 
 @dataclasses.dataclass
@@ -36,6 +42,12 @@ class RuntimeResult(simulator.SimResult):
     ``verify_errors``    (J, L) max relative decode error vs the exact
                          layered oracle, NaN where unverified/incomplete
                          (populated when the master runs with verify=True).
+    ``stage_seconds``    total seconds per pipeline stage (see ``STAGES``)
+                         across the run; decode/encode here are the
+                         *observed* (pipelined) costs, so overlapped work
+                         does not inflate the critical path it hid behind.
+    ``stage_rounds``     rounds dispatched (the divisor for per-round
+                         stage costs).
     """
 
     worker_busy: np.ndarray = dataclasses.field(
@@ -45,6 +57,8 @@ class RuntimeResult(simulator.SimResult):
     released: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, dtype=np.int64))
     verify_errors: np.ndarray | None = None
+    stage_seconds: dict | None = None
+    stage_rounds: int = 0
 
     @property
     def utilization(self) -> np.ndarray:
@@ -52,6 +66,15 @@ class RuntimeResult(simulator.SimResult):
         if self.wall_elapsed <= 0:
             return np.zeros_like(self.worker_busy)
         return self.worker_busy / self.wall_elapsed
+
+    def per_round_overhead(self) -> float:
+        """Master-side seconds/round (encode + decode, excluding worker
+        wait and dispatch/publish) — the ISSUE's headline metric."""
+        if not self.stage_seconds or not self.stage_rounds:
+            return float("nan")
+        s = self.stage_seconds
+        return (s.get("encode", 0.0) + s.get("decode", 0.0)
+                ) / self.stage_rounds
 
     def release_histogram(self) -> np.ndarray:
         """(L + 1,) job counts by released resolution; slot 0 = none (-1)."""
@@ -87,6 +110,24 @@ def delay_table(result: simulator.SimResult,
             row["theory_lower_bound"] = float(bounds[l])
         rows.append(row)
     return rows
+
+
+def format_stage_table(result: "RuntimeResult") -> str:
+    """Per-stage timing breakdown: total seconds, us/round, share."""
+    if not result.stage_seconds or not result.stage_rounds:
+        return "(no stage timings recorded)"
+    s = result.stage_seconds
+    total = sum(s.get(k, 0.0) for k in STAGES)
+    lines = [f"{'stage':>9} {'total s':>10} {'us/round':>10} {'share':>7}"]
+    for k in STAGES:
+        v = s.get(k, 0.0)
+        lines.append(f"{k:>9} {v:>10.4f} "
+                     f"{v / result.stage_rounds * 1e6:>10.1f} "
+                     f"{v / total:>7.1%}")
+    ov = result.per_round_overhead()
+    lines.append(f"master-side overhead (encode+decode): "
+                 f"{ov * 1e6:.1f} us/round over {result.stage_rounds} rounds")
+    return "\n".join(lines)
 
 
 def format_delay_table(rows: list[dict]) -> str:

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import coding, layering, scheduling
 
-__all__ = ["RuntimeConfig", "JobSpec", "RoundContext", "TaskSpec",
+__all__ = ["RuntimeConfig", "JobSpec", "RoundContext", "RoundBatch",
            "TaskResult"]
 
 
@@ -152,14 +152,25 @@ class RoundContext:
 
 
 @dataclasses.dataclass(frozen=True)
-class TaskSpec:
-    """One coded task: compute ``x.T @ y`` for codeword ``task_id``."""
+class RoundBatch:
+    """One worker's slice of a round's codeword, dispatched as a unit.
+
+    ``x``/``y`` are zero-copy views into the round's encoded ``(T, K, *)``
+    buffers (``X[lo:hi]``), not per-task copies: the worker indexes task
+    ``i`` as ``x[i]``/``y[i]`` (again views) right before computing.  One
+    queue append + one notify per worker per round, instead of ``kappa_p``
+    task objects.
+    """
 
     ctx: RoundContext
-    task_id: int            # index into the round's T-task codeword
-    x: np.ndarray           # (K, M/n1) coded block of A planes
-    y: np.ndarray           # (K, N/n2) coded block of B planes
-    delay: float            # injected straggler delay (seconds)
+    first_task_id: int      # codeword index of x[0]
+    x: np.ndarray           # (n, K, M/n1) view of coded A blocks
+    y: np.ndarray           # (n, K, N/n2) view of coded B blocks
+    delays: np.ndarray      # (n,) injected straggler delays (seconds)
+
+    @property
+    def count(self) -> int:
+        return self.x.shape[0]
 
 
 @dataclasses.dataclass(frozen=True)

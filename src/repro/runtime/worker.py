@@ -27,11 +27,11 @@ from __future__ import annotations
 import collections
 import threading
 import time
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional
 
 import numpy as np
 
-from repro.runtime.tasks import RuntimeConfig, TaskResult, TaskSpec
+from repro.runtime.tasks import RoundBatch, RuntimeConfig, TaskResult
 
 __all__ = ["StragglerModel", "Worker", "WorkerPool", "clock"]
 
@@ -83,16 +83,17 @@ class Worker(threading.Thread):
         self.worker_id = worker_id
         self._sink = sink
         self._compute = compute
-        self._queue: collections.deque[TaskSpec] = collections.deque()
+        self._queue: collections.deque[RoundBatch] = collections.deque()
         self._cv = threading.Condition()
         self._stopping = False
         self.busy_seconds = 0.0      # occupied (delay + compute), incl. purged
         self.tasks_done = 0
         self.tasks_purged = 0
 
-    def submit(self, specs: Sequence[TaskSpec]) -> None:
+    def submit_round(self, batch: RoundBatch) -> None:
+        """Enqueue one round's whole slice: one append, one notify."""
         with self._cv:
-            self._queue.extend(specs)
+            self._queue.append(batch)
             self._cv.notify()
 
     def stop(self) -> None:
@@ -107,32 +108,40 @@ class Worker(threading.Thread):
                     self._cv.wait()
                 if not self._queue:
                     return          # stopping and drained
-                task = self._queue.popleft()
-            self._process(task)
+                batch = self._queue.popleft()
+            self._process_batch(batch)
 
-    def _process(self, task: TaskSpec) -> None:
-        if task.ctx.cancelled:
+    def _process_batch(self, batch: RoundBatch) -> None:
+        for i in range(batch.count):
+            if batch.ctx.cancelled:
+                self.tasks_purged += batch.count - i
+                return
+            self._process_one(batch.ctx, batch.first_task_id + i,
+                              batch.x[i], batch.y[i],
+                              float(batch.delays[i]))
+
+    def _process_one(self, ctx, task_id: int, x: np.ndarray, y: np.ndarray,
+                     delay: float) -> None:
+        if ctx.cancelled:
             self.tasks_purged += 1
             return
         t0 = clock()
-        if task.delay > 0.0:
+        if delay > 0.0:
             # block on the purge event, not time.sleep: a fused round
             # reclaims this worker immediately.
-            if task.ctx.cancel.wait(timeout=task.delay):
+            if ctx.cancel.wait(timeout=delay):
                 self.busy_seconds += clock() - t0
                 self.tasks_purged += 1
                 return
-        elif task.ctx.cancelled:
+        elif ctx.cancelled:
             self.tasks_purged += 1
             return
-        value = self._compute(task.x, task.y)
+        value = self._compute(x, y)
         now = clock()
         self.busy_seconds += now - t0
         self.tasks_done += 1
-        self._sink(TaskResult(job_id=task.ctx.job_id,
-                              round_idx=task.ctx.round_idx,
-                              task_id=task.task_id,
-                              worker_id=self.worker_id,
+        self._sink(TaskResult(job_id=ctx.job_id, round_idx=ctx.round_idx,
+                              task_id=task_id, worker_id=self.worker_id,
                               value=value, finished_at=now))
 
 
@@ -159,19 +168,34 @@ class WorkerPool:
         for w in self.workers:
             w.start()
 
+    def sample_round_delays(self, kappa: np.ndarray) -> list[np.ndarray]:
+        """Per-worker injected-delay vectors for one round's split.
+
+        Split out of :meth:`dispatch_round` so the master can presample
+        the next round's delays off the critical path (in its
+        encode-ahead slot) and dispatch with buffers alone.
+        """
+        return [self.straggler.sample(p, int(kappa[p]))
+                for p in range(len(self.workers))]
+
     def dispatch_round(self, ctx, X: np.ndarray, Y: np.ndarray,
-                      kappa: np.ndarray) -> None:
+                      kappa: np.ndarray,
+                      delays: Optional[list] = None) -> None:
         """Assign the round's T coded tasks: worker p gets a contiguous
-        ``kappa_p``-slice of the codeword, with per-task injected delays."""
-        offsets = np.concatenate([[0], np.cumsum(kappa)])
+        ``kappa_p``-slice of the codeword as ONE zero-copy
+        :class:`RoundBatch` (views into X/Y, no per-task objects), with
+        per-task injected delays."""
+        if delays is None:
+            delays = self.sample_round_delays(kappa)
+        lo = 0
         for p, w in enumerate(self.workers):
-            lo, hi = int(offsets[p]), int(offsets[p + 1])
+            hi = lo + int(kappa[p])
             if lo == hi:
                 continue
-            delays = self.straggler.sample(p, hi - lo)
-            w.submit([TaskSpec(ctx=ctx, task_id=t, x=X[t], y=Y[t],
-                               delay=float(delays[t - lo]))
-                      for t in range(lo, hi)])
+            w.submit_round(RoundBatch(ctx=ctx, first_task_id=lo,
+                                      x=X[lo:hi], y=Y[lo:hi],
+                                      delays=delays[p]))
+            lo = hi
 
     def shutdown(self, timeout: float = 10.0) -> None:
         for w in self.workers:
