@@ -1,0 +1,206 @@
+"""Adaptive-ω benchmark: online redundancy control vs. static ω.
+
+Sweeps static redundancy ratios and the adaptive policies
+(:mod:`repro.runtime.adaptive`) over three straggler regimes on the real
+master/worker/fusion engine, and reports per-variant resolution-0 mean
+delay and deadline success rate (fraction of jobs releasing at least
+resolution 0 before §IV termination):
+
+  stationary  exp stragglers, nothing changes — adaptation should cost
+              nothing (static and adaptive land within noise).
+  shift       a worker goes dark mid-run ("shift" injection): the regime
+              the controller exists for.  Low static ω starves fusion
+              after the shift (with T = k every worker's task is
+              critical); the controller grows ω the moment rounds miss.
+  burst       the worker goes dark for ``burst_len`` seconds of every
+              ``burst_period`` ("burst" injection): the controller must
+              grow into bursts and may shrink between them.
+
+The ISSUE/acceptance verdict is evaluated on the shift scenario: the
+adaptive policy must be within noise of the BEST static ω and strictly
+better than the WORST static ω on deadline success rate, with res-0 mean
+delay within noise of the best static.  Every variant runs against the
+same arrival trace and the same wall-clock regime timeline, so the
+comparison is apples-to-apples.
+
+Run:  PYTHONPATH=src python benchmarks/bench_adaptive_omega.py --jobs 120
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.runtime import RuntimeConfig, run_jobs
+
+MU = (385.95, 650.92, 373.40, 415.75, 373.98)   # the paper's §IV cluster
+
+#: Static redundancy grid.  At omega=1.0 the codeword has no slack
+#: (T = k = 4) and the eq. (1) split leaves a coded task on the worker
+#: that the shift/burst regimes stall — the worst case the controller
+#: must escape.  omega=1.5 is the repo-default provisioning; omega=2.0
+#: is over-provisioned.
+STATIC_OMEGAS = (1.0, 1.5, 2.0)
+ADAPTIVE_POLICIES = ("aimd", "deadline-margin")
+
+#: Noise tolerances for the verdict: success rates are job fractions
+#: (threaded run, ~hundreds of jobs), delays carry timer-granularity
+#: jitter per round.
+SUCCESS_TOL = 0.05
+DELAY_TOL = 0.30
+
+
+def scenario_base(name: str, jobs: int) -> RuntimeConfig:
+    """The shared cluster/workload for one scenario (omega/adapt vary)."""
+    # Expected span: jobs / arrival_rate seconds; regime boundaries sit
+    # mid-run so every variant sees both regimes for ~half its jobs.
+    span = jobs / 12.0
+    if name == "stationary":
+        return RuntimeConfig(mu=MU, arrival_rate=12.0, complexity=10.0,
+                             deadline=0.035, straggler="exp", seed=7)
+    if name == "shift":
+        # worker 1 (the fastest — always holds coded tasks) goes dark
+        return RuntimeConfig(mu=MU, arrival_rate=12.0, complexity=10.0,
+                             deadline=0.035, straggler="shift",
+                             stall_workers=(1,), shift_at=span / 2,
+                             stall_seconds=1.0, seed=7)
+    if name == "burst":
+        return RuntimeConfig(mu=MU, arrival_rate=12.0, complexity=10.0,
+                             deadline=0.035, straggler="burst",
+                             stall_workers=(1,), burst_period=span / 3,
+                             burst_len=span / 6, stall_seconds=1.0, seed=7)
+    raise ValueError(f"unknown scenario {name!r}")
+
+
+def run_variant(cfg: RuntimeConfig, jobs: int) -> dict:
+    t0 = time.perf_counter()
+    result, _ = run_jobs(cfg, jobs, K=64, M=8, N=8)
+    wall = time.perf_counter() - t0
+    md = result.mean_delay()
+    sr = result.success_rate()
+    ctl = result.controller or {}
+    return {
+        "adapt": cfg.adapt,
+        "omega": cfg.omega,
+        "omega_final": ctl.get("omega_final", cfg.omega),
+        "res0_mean_delay": float(md[0]),
+        "res0_success_rate": float(sr[0]),
+        "final_success_rate": float(sr[-1]),
+        "terminated": int(result.terminated.sum()),
+        "stale_results": int(result.stale_results),
+        "retunes": int(ctl.get("retunes", 0)),
+        "switches": int(ctl.get("switches", 0)),
+        "prime_seconds_total": float(ctl.get("prime_seconds_total", 0.0)),
+        "wall_seconds": round(wall, 2),
+    }
+
+
+def variant_label(row: dict) -> str:
+    if row["adapt"] == "fixed":
+        return f"static w={row['omega']:.2f}"
+    return f"adapt {row['adapt']} (w {row['omega']:.2f}->" \
+           f"{row['omega_final']:.2f})"
+
+
+def verdict(static_rows: list[dict], adaptive_rows: list[dict]) -> dict:
+    """The acceptance comparison: adaptive vs best/worst static ω.
+
+    Best/worst static are chosen by res-0 success rate (ties broken by
+    res-0 mean delay) — the §IV metric the deadline system optimizes.
+    """
+    key = lambda r: (r["res0_success_rate"], -r["res0_mean_delay"])
+    best = max(static_rows, key=key)
+    worst = min(static_rows, key=key)
+    # When even the worst static omega succeeds near-always (stationary
+    # regimes), there is no gap to strictly beat; the verdict then rests
+    # on matching the best.  The flag is reported honestly as its own
+    # field rather than folded into "strictly beats".
+    worst_beatable = worst["res0_success_rate"] <= 1.0 - SUCCESS_TOL
+    out = {"best_static_omega": best["omega"],
+           "worst_static_omega": worst["omega"],
+           "worst_static_beatable": bool(worst_beatable), "policies": {}}
+    for row in adaptive_rows:
+        ok_success_best = (row["res0_success_rate"]
+                           >= best["res0_success_rate"] - SUCCESS_TOL)
+        ok_delay_best = (row["res0_mean_delay"]
+                         <= best["res0_mean_delay"] * (1 + DELAY_TOL))
+        beats_worst = (row["res0_success_rate"]
+                       > worst["res0_success_rate"] + SUCCESS_TOL)
+        out["policies"][row["adapt"]] = {
+            "within_noise_of_best_static": bool(ok_success_best
+                                                and ok_delay_best),
+            "strictly_beats_worst_static": bool(beats_worst),
+            "pass": bool(ok_success_best and ok_delay_best
+                         and (beats_worst or not worst_beatable)),
+        }
+    return out
+
+
+def run_scenario(name: str, jobs: int) -> dict:
+    base = scenario_base(name, jobs)
+    print(f"\n== {name}: {jobs} jobs/variant, straggler={base.straggler}, "
+          f"deadline={base.deadline} ==")
+    static_rows, adaptive_rows = [], []
+    for omega in STATIC_OMEGAS:
+        static_rows.append(run_variant(
+            dataclasses.replace(base, omega=omega), jobs))
+    for policy in ADAPTIVE_POLICIES:
+        # adaptive variants start at the WORST provisioning (omega_min) and
+        # must earn their redundancy from the runtime signals alone
+        adaptive_rows.append(run_variant(
+            dataclasses.replace(base, omega=1.0, adapt=policy), jobs))
+    head = (f"{'variant':>34} {'res0 delay':>11} {'res0 succ':>10} "
+            f"{'final succ':>10} {'term':>5} {'stale':>6} {'switch':>6}")
+    print(head)
+    for row in static_rows + adaptive_rows:
+        print(f"{variant_label(row):>34} {row['res0_mean_delay']:>11.4f} "
+              f"{row['res0_success_rate']:>10.3f} "
+              f"{row['final_success_rate']:>10.3f} {row['terminated']:>5} "
+              f"{row['stale_results']:>6} {row['switches']:>6}")
+    v = verdict(static_rows, adaptive_rows)
+    print(f"best static w={v['best_static_omega']}, "
+          f"worst static w={v['worst_static_omega']}"
+          + ("" if v["worst_static_beatable"]
+             else " (near-perfect: no strict gap to beat)"))
+    for policy, res in v["policies"].items():
+        print(f"  {policy}: within noise of best={res['within_noise_of_best_static']}, "
+              f"beats worst={res['strictly_beats_worst_static']} -> "
+              f"{'PASS' if res['pass'] else 'FAIL'}")
+    return {"name": name, "jobs": jobs, "deadline": base.deadline,
+            "straggler": base.straggler, "static": static_rows,
+            "adaptive": adaptive_rows, "verdict": v}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--jobs", type=int, default=120,
+                    help="jobs per variant (5 variants per scenario)")
+    ap.add_argument("--scenarios", default="stationary,shift,burst",
+                    help="comma list from {stationary, shift, burst}")
+    ap.add_argument("--out", default="BENCH_adaptive_omega.json")
+    args = ap.parse_args(argv)
+
+    names = [s for s in args.scenarios.split(",") if s]
+    report = {"bench": "adaptive_omega", "jobs_per_variant": args.jobs,
+              "static_omegas": list(STATIC_OMEGAS),
+              "adaptive_policies": list(ADAPTIVE_POLICIES),
+              "scenarios": [run_scenario(n, args.jobs) for n in names]}
+    path = pathlib.Path(args.out)
+    path.write_text(json.dumps(report, indent=2))
+    print(f"\nwrote {path}")
+    # exit nonzero if the shift acceptance verdict fails for every policy
+    shift = [s for s in report["scenarios"] if s["name"] == "shift"]
+    if shift and not any(p["pass"]
+                         for p in shift[0]["verdict"]["policies"].values()):
+        print("ACCEPTANCE FAIL: no adaptive policy passed the shift verdict")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -127,8 +127,16 @@ class DecodePlan:
     factorization once and a single small GEMM per round, instead of the
     per-fuse ``np.vander`` + ``np.linalg.solve`` rebuild.
 
-    Thread-safe; ``cache_info()`` exposes hit/miss/eviction counters for
-    profiling and tests.
+    Thread-safe: the operator LRU is lock-guarded (factorizations happen
+    outside the lock, so concurrent decoders never serialize on BLAS),
+    and instances are shared process-wide per geometry via
+    ``PolynomialCode.plan`` / ``MDSCode.plan`` — which is what makes the
+    adaptive-ω controller's geometry switches cheap: revisiting a
+    previously-used codeword length finds its plan (and its warm
+    operator cache) intact.  ``cache_info()`` exposes hit/miss/eviction
+    counters for profiling and tests.  This is the §II-A any-``k``
+    decode made incremental; no wall-clock state lives here (plans are
+    pure functions of the geometry).
     """
 
     def __init__(self, points: np.ndarray, k: int, *, mode: str = "float",
@@ -298,12 +306,7 @@ class PolynomialCode:
 
     # -- evaluation points ---------------------------------------------------
     def points(self) -> np.ndarray:
-        if self.mode == "float":
-            # Chebyshev nodes keep the Vandermonde system well-conditioned.
-            t = self.num_tasks
-            i = np.arange(t)
-            return np.cos((2 * i + 1) * np.pi / (2 * t)).astype(np.float64)
-        return np.arange(1, self.num_tasks + 1, dtype=np.int64)
+        return _eval_points(self.num_tasks, self.mode)
 
     # -- precomputed plans ----------------------------------------------------
     def plan(self) -> DecodePlan:
@@ -401,26 +404,57 @@ class PolynomialCode:
         return out
 
 
-# bounded: a long-lived process retuning the geometry (the ROADMAP's
-# adaptive-omega loop, parameter sweeps) must not accumulate plans forever
-@functools.lru_cache(maxsize=64)
+def _eval_points(num_tasks: int, mode: str) -> np.ndarray:
+    """The codeword's evaluation points — a function of (T, mode) ONLY.
+
+    Chebyshev nodes in float mode (well-conditioned Vandermonde); 1..T in
+    GF(p) mode.  Shared by encode bases and decode plans so both cache by
+    *geometry*, never by the exact ``omega`` float that produced it.
+    """
+    if mode == "float":
+        i = np.arange(num_tasks)
+        return np.cos((2 * i + 1) * np.pi
+                      / (2 * num_tasks)).astype(np.float64)
+    return np.arange(1, num_tasks + 1, dtype=np.int64)
+
+
+# Plans/bases are cached process-wide by GEOMETRY (k or n1/n2, codeword
+# length T, mode, p) — not by the PolynomialCode instance — so two codes
+# whose omegas differ but land on the same T = ceil(k * omega) share one
+# plan and its warm operator cache.  This is what makes the adaptive-ω
+# controller's oscillations cheap: AIMD's multiplicative shrink almost
+# never reproduces an exact prior omega, but constantly revisits prior
+# codeword lengths.  Bounded: a long-lived process retuning the geometry
+# (parameter sweeps, the controller) must not accumulate plans forever.
 def _decode_plan(code: PolynomialCode) -> DecodePlan:
-    return DecodePlan(code.points(), code.k, mode=code.mode, p=code.p)
+    return _plan_by_geometry(code.k, code.num_tasks, code.mode, code.p)
 
 
 @functools.lru_cache(maxsize=64)
+def _plan_by_geometry(k: int, num_tasks: int, mode: str,
+                      p: int) -> DecodePlan:
+    return DecodePlan(_eval_points(num_tasks, mode), k, mode=mode, p=p)
+
+
 def _encode_basis(code: PolynomialCode) -> tuple[np.ndarray, np.ndarray]:
+    return _basis_by_geometry(code.n1, code.n2, code.num_tasks, code.mode,
+                              code.p)
+
+
+@functools.lru_cache(maxsize=64)
+def _basis_by_geometry(n1: int, n2: int, num_tasks: int, mode: str,
+                       p: int) -> tuple[np.ndarray, np.ndarray]:
     """Per-geometry encode matrices ``va (n1, T)``, ``vb (n2, T)``."""
-    pts = code.points()
-    if code.mode == "float":
-        va = np.stack([pts**r for r in range(code.n1)], 0)
-        vb = np.stack([pts ** (s * code.n1) for s in range(code.n2)], 0)
+    pts = _eval_points(num_tasks, mode)
+    if mode == "float":
+        va = np.stack([pts**r for r in range(n1)], 0)
+        vb = np.stack([pts ** (s * n1) for s in range(n2)], 0)
         return va, vb
     # exact GF(p): Python-int powers reduced mod p
-    va = np.array([[pow(int(pt), r, code.p) for pt in pts]
-                   for r in range(code.n1)], dtype=np.uint64)
-    vb = np.array([[pow(int(pt), s * code.n1, code.p) for pt in pts]
-                   for s in range(code.n2)], dtype=np.uint64)
+    va = np.array([[pow(int(pt), r, p) for pt in pts]
+                   for r in range(n1)], dtype=np.uint64)
+    vb = np.array([[pow(int(pt), s * n1, p) for pt in pts]
+                   for s in range(n2)], dtype=np.uint64)
     return va, vb
 
 
@@ -474,8 +508,7 @@ class MDSCode:
             raise ValueError(f"need n >= k, got n={self.n} < k={self.k}")
 
     def points(self) -> np.ndarray:
-        i = np.arange(self.n)
-        return np.cos((2 * i + 1) * np.pi / (2 * self.n)).astype(np.float64)
+        return _eval_points(self.n, "float")
 
     def generator(self, dtype=jnp.float32) -> jax.Array:
         """(n, k) generator matrix G: codewords = G @ shards."""
@@ -512,6 +545,8 @@ class MDSCode:
         return jnp.tensordot(jnp.asarray(Vinv, codewords.dtype), cw, axes=1)
 
 
-@functools.lru_cache(maxsize=64)
 def _mds_plan(code: MDSCode) -> DecodePlan:
-    return DecodePlan(code.points(), code.k)
+    # same geometry keying (and Chebyshev points) as the 2-D code: an
+    # MDSCode(k, n) shares its plan with any PolynomialCode of equal
+    # (k, T) in float mode
+    return _plan_by_geometry(code.k, code.n, "float", MERSENNE_P)

@@ -25,7 +25,8 @@ import pathlib
 import numpy as np
 
 from repro.core import simulator
-from repro.runtime import (RuntimeConfig, delay_table, format_delay_table,
+from repro.runtime import (POLICIES, RuntimeConfig, delay_table,
+                           format_controller_trace, format_delay_table,
                            format_stage_table, run_jobs)
 
 __all__ = ["main", "build_config", "summarize"]
@@ -47,6 +48,10 @@ def build_config(args: argparse.Namespace) -> RuntimeConfig:
         deadline=args.deadline, straggler=args.straggler,
         stall_workers=_ints(args.stall_workers),
         stall_seconds=args.stall_seconds,
+        shift_at=args.shift_at if args.shift_at is not None else 0.0,
+        burst_period=args.burst_period, burst_len=args.burst_len,
+        adapt=args.adapt, omega_min=args.omega_min,
+        omega_max=args.omega_max,
         use_jax_devices=args.jax_devices, seed=args.seed)
 
 
@@ -73,6 +78,8 @@ def summarize(cfg: RuntimeConfig, result) -> dict:
         "stage_seconds": {k: float(v)
                           for k, v in (result.stage_seconds or {}).items()},
         "stage_rounds": int(result.stage_rounds),
+        "controller": result.controller,
+        "omega_trace": result.omega_trace,
     }
     if result.verify_errors is not None:
         finite = result.verify_errors[np.isfinite(result.verify_errors)]
@@ -102,11 +109,27 @@ def main(argv=None) -> int:
                          "complexity / (m^2 mu_p) seconds")
     ap.add_argument("--deadline", type=float, default=None,
                     help="seconds from service start (None = no deadline)")
-    ap.add_argument("--straggler", choices=("none", "exp", "stall"),
+    ap.add_argument("--straggler",
+                    choices=("none", "exp", "stall", "shift", "burst"),
                     default="exp")
     ap.add_argument("--stall-workers", default="",
-                    help="comma list of worker ids pinned slow (stall mode)")
+                    help="comma list of worker ids that go dark "
+                         "(stall/shift/burst modes)")
     ap.add_argument("--stall-seconds", type=float, default=30.0)
+    ap.add_argument("--shift-at", type=float, default=None,
+                    help="shift mode: seconds until stall-workers go dark "
+                         "(required with --straggler shift; 0 would just "
+                         "be 'stall' with extra steps)")
+    ap.add_argument("--burst-period", type=float, default=1.0,
+                    help="burst mode: seconds between outage starts")
+    ap.add_argument("--burst-len", type=float, default=0.2,
+                    help="burst mode: outage seconds per period")
+    ap.add_argument("--adapt", choices=tuple(sorted(POLICIES)),
+                    default="fixed",
+                    help="online omega policy (fixed = the paper's static "
+                         "redundancy)")
+    ap.add_argument("--omega-min", type=float, default=1.0)
+    ap.add_argument("--omega-max", type=float, default=3.0)
     ap.add_argument("--jax-devices", action="store_true",
                     help="place per-worker compute on JAX devices")
     ap.add_argument("--K", type=int, default=64)
@@ -116,7 +139,8 @@ def main(argv=None) -> int:
                     help="skip decode-vs-oracle verification")
     ap.add_argument("--profile", action="store_true",
                     help="print the per-stage master pipeline breakdown "
-                         "(prep/encode/dispatch/wait/decode/publish)")
+                         "(prep/encode/dispatch/wait/decode/publish/"
+                         "control) and the omega controller trace")
     ap.add_argument("--compare-sim", action="store_true",
                     help="also run the §IV simulator + eq.(4) bounds on the "
                          "same configuration")
@@ -124,12 +148,19 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, help="write summary JSON here")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.straggler == "shift" and args.shift_at is None:
+        ap.error("--straggler shift needs an explicit --shift-at (seconds "
+                 "until the outage); an implicit 0 would start the run "
+                 "already degraded, never showing the regime change")
+    if args.straggler in ("shift", "burst") and not _ints(args.stall_workers):
+        ap.error(f"--straggler {args.straggler} needs --stall-workers: "
+                 f"with none listed, the regime change is a no-op")
 
     cfg = build_config(args)
     print(f"[runctl] {cfg.num_workers} workers, k={cfg.k} of "
           f"T={cfg.total_tasks} coded tasks/round, {cfg.num_rounds} rounds, "
           f"L={cfg.num_layers} resolutions, straggler={cfg.straggler}, "
-          f"deadline={cfg.deadline}")
+          f"deadline={cfg.deadline}, adapt={cfg.adapt}")
     result, _ = run_jobs(cfg, args.jobs, K=args.K, M=args.M, N=args.N,
                          verify=not args.no_verify)
     print(f"[runctl] kappa (eq.1 split): {result.kappa.tolist()}  "
@@ -148,6 +179,8 @@ def main(argv=None) -> int:
     if args.profile:
         print("[runctl] per-stage master pipeline breakdown:")
         print(format_stage_table(result))
+        print("[runctl] omega controller trace:")
+        print(format_controller_trace(result))
 
     if args.compare_sim:
         scfg = cfg.to_system_config()

@@ -17,9 +17,14 @@ Quickstart::
     print(result.mean_delay(), result.success_rate())
 """
 
+from repro.runtime.adaptive import (POLICIES, AIMDPolicy,
+                                    DeadlineMarginPolicy, FixedPolicy,
+                                    OmegaController, OmegaPolicy,
+                                    RoundObservation)
 from repro.runtime.fusion import FusionNode, LayeredResult, RoundFusion
 from repro.runtime.master import Master, make_jobs, run_jobs
 from repro.runtime.metrics import (STAGES, RuntimeResult, delay_table,
+                                   format_controller_trace,
                                    format_delay_table, format_stage_table)
 from repro.runtime.tasks import (JobSpec, RoundBatch, RoundContext,
                                  RuntimeConfig, TaskResult)
@@ -30,6 +35,8 @@ __all__ = [
     "Worker", "WorkerPool", "StragglerModel",
     "FusionNode", "RoundFusion", "LayeredResult",
     "Master", "make_jobs", "run_jobs",
+    "OmegaController", "OmegaPolicy", "RoundObservation", "POLICIES",
+    "FixedPolicy", "AIMDPolicy", "DeadlineMarginPolicy",
     "RuntimeResult", "delay_table", "format_delay_table",
-    "format_stage_table", "STAGES",
+    "format_stage_table", "format_controller_trace", "STAGES",
 ]

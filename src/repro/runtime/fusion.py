@@ -91,10 +91,22 @@ class FusionNode:
 class LayeredResult:
     """Future-like progressive result of one job (L resolutions).
 
+    The runtime realization of Definition 1 + the §IV release rule:
     ``resolution(l)`` / ``wait_resolution(l)`` expose per-resolution
-    readiness; ``released`` fires at job end (all rounds done, or deadline
+    readiness (resolution ``l`` is ready the moment its last mini-job
+    decodes, MSB-first, so resolution 0 is ready after one round);
+    ``released`` fires at job end (all rounds done, or §IV deadline
     termination) with ``released_resolution`` the highest completed layer
     (-1 if even resolution 0 was cut off).
+
+    Threading: the producer is the master thread (``mark_resolution`` /
+    ``release``); any number of consumer threads may concurrently wait on
+    or read resolutions.  Each per-layer value is stored *before* its
+    event is set, so an observed-set event is the happens-before edge
+    that makes the read safe — consumers must go through the accessors,
+    which enforce it.  Timestamps (``ready_at``) are seconds on the
+    runtime's monotonic clock, the round's ``fused_at`` k-th-arrival
+    instant (simulator order-statistic semantics, not the decode time).
     """
 
     def __init__(self, job_id: int, num_layers: int):
@@ -109,21 +121,30 @@ class LayeredResult:
 
     # -- producer side (master) ---------------------------------------------
     def mark_resolution(self, l: int, value: np.ndarray, t: float) -> None:
+        """Publish resolution ``l`` (master thread only).
+
+        ``t`` is the round's ``fused_at`` instant in monotonic seconds.
+        Value first, then event: the event IS the publication barrier.
+        """
         self._values[l] = value
         self._ready_at[l] = t
         self._events[l].set()
 
     def release(self, *, terminated: bool) -> None:
+        """End the job (§IV finish or termination); master thread only."""
         self.terminated = terminated
         self.released_resolution = self.best_resolution()
         self._released.set()
 
     # -- consumer side -------------------------------------------------------
     def resolution_ready(self, l: int) -> bool:
+        """Non-blocking readiness probe; safe from any thread."""
         return self._events[l].is_set()
 
     def wait_resolution(self, l: int,
                         timeout: Optional[float] = None) -> bool:
+        """Block until resolution ``l`` is ready; ``timeout`` in seconds
+        (None = wait forever).  Returns False on timeout."""
         return self._events[l].wait(timeout=timeout)
 
     def resolution(self, l: int) -> np.ndarray:
@@ -135,6 +156,8 @@ class LayeredResult:
         return self._values[l]
 
     def ready_at(self, l: int) -> Optional[float]:
+        """Monotonic-seconds instant resolution ``l`` fused (None if not
+        ready) — the delay-table timestamp."""
         return self._ready_at[l]
 
     def best_resolution(self) -> int:
@@ -150,6 +173,8 @@ class LayeredResult:
         return -1
 
     def wait_released(self, timeout: Optional[float] = None) -> bool:
+        """Block until the job ends (finish or §IV termination);
+        ``timeout`` in seconds.  Returns False on timeout."""
         return self._released.wait(timeout=timeout)
 
     def result(self) -> np.ndarray:

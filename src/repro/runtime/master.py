@@ -32,6 +32,14 @@ operators), so the steady-state critical path per round is dispatch +
 fusion wait.  Per-stage wall time is accounted in
 ``RuntimeResult.stage_seconds``.
 
+Redundancy is controlled *online*: after every round the master feeds the
+:class:`~repro.runtime.adaptive.OmegaController` a
+:class:`~repro.runtime.adaptive.RoundObservation` (fusion wait, stale
+count, deadline margin, utilization) and subsequent encodes pick up any
+retuned ``(code, kappa)`` — see :mod:`repro.runtime.adaptive` and
+``docs/adaptive-omega.md``.  With the default ``cfg.adapt = "fixed"`` the
+geometry never moves and the loop is the paper's static-ω system.
+
 With ``verify=True`` every published resolution is checked against the
 exact layered oracle (``layering.layered_matmul_reference``, the same
 oracle the Pallas kernel in ``repro.kernels.layered_matmul`` is tested
@@ -48,6 +56,7 @@ import numpy as np
 
 from repro.core import layering
 from repro.runtime import metrics
+from repro.runtime.adaptive import OmegaController, RoundObservation
 from repro.runtime.fusion import FusionNode, LayeredResult
 from repro.runtime.tasks import JobSpec, RoundContext, RuntimeConfig
 from repro.runtime.worker import WorkerPool, clock
@@ -79,14 +88,29 @@ def make_jobs(cfg: RuntimeConfig, num_jobs: int, *, K: int = 64, M: int = 8,
 
 
 class Master:
-    """Event loop owning the worker pool and the fusion node."""
+    """Event loop owning the worker pool, fusion node, and ω-controller.
+
+    Single-threaded driver: :meth:`run` is meant to be called once, from
+    one thread — it spawns the worker pool, blocks until every job is
+    served, and shuts the pool down.  The only cross-thread surfaces are
+    the :class:`~repro.runtime.fusion.LayeredResult` futures it returns
+    (consumable concurrently while the run progresses) and the fusion
+    node's result sink.  All reported times are seconds
+    (``time.monotonic`` deltas from the run start).
+
+    The code geometry is owned by an
+    :class:`~repro.runtime.adaptive.OmegaController` (``cfg.adapt`` picks
+    the policy; the default ``"fixed"`` reproduces the paper's static-ω
+    §IV system exactly): after every round the master feeds it a
+    :class:`~repro.runtime.adaptive.RoundObservation` and subsequent
+    encodes pick up any retuned ``(code, kappa)``.
+    """
 
     def __init__(self, cfg: RuntimeConfig, *, verify: bool = False):
         self.cfg = cfg
         self.verify = verify
         self.fusion = FusionNode()
-        self._code = cfg.code()
-        self._kappa = cfg.load_split()
+        self.controller = OmegaController(cfg)
 
     # -- operand preparation -------------------------------------------------
     def _prepare(self, job: JobSpec):
@@ -109,19 +133,20 @@ class Master:
 
     def _warmup(self, job: JobSpec) -> None:
         """Run one encode/compute/decode off the clock (BLAS/cache warm)."""
+        code = self.controller.code
         _, _, _, ca, cb = self._prepare(job)
-        X = self._code.encode_a(np.asarray(ca[0], np.float64))
-        Y = self._code.encode_b(np.asarray(cb[0], np.float64))
-        self._code.decode(list(range(self._code.k)),
-                          np.stack([X[t].T @ Y[t]
-                                    for t in range(self._code.k)]))
+        X = code.encode_a(np.asarray(ca[0], np.float64))
+        Y = code.encode_b(np.asarray(cb[0], np.float64))
+        code.decode(list(range(code.k)),
+                    np.stack([X[t].T @ Y[t] for t in range(code.k)]))
 
     # -- the event loop --------------------------------------------------------
     def run(self, jobs: Sequence[JobSpec]
             ) -> tuple[metrics.RuntimeResult, list[LayeredResult]]:
         """Serve ``jobs`` FIFO; returns (measured result, per-job futures)."""
         cfg = self.cfg
-        code, kappa = self._code, self._kappa
+        ctrl = self.controller
+        kappa0 = ctrl.kappa.copy()      # geometry at run start (eq. 1)
         L = cfg.num_layers
         order = layering.all_minijobs_msb_first(cfg.m)
         cum = layering.cumulative_minijobs(cfg.m)
@@ -145,6 +170,8 @@ class Master:
         futures: list[LayeredResult] = []
         stage = {name: 0.0 for name in metrics.STAGES}
         rounds_timed = 0
+        global_round = 0                  # across jobs (controller clock)
+        prev_stale = 0
         R = len(order)
         prepared: dict[int, tuple] = {}   # job idx -> pre-decomposed planes
 
@@ -173,24 +200,34 @@ class Master:
 
                 acc = np.zeros((qa.shape[1], qb.shape[1]), dtype=np.float64)
                 # per-side coded planes, filled on first use: the m**2
-                # rounds need only m A-side + m B-side encodes per job
-                enc_a: dict[int, np.ndarray] = {}
-                enc_b: dict[int, np.ndarray] = {}
+                # rounds need only m A-side + m B-side encodes per job.
+                # Keyed by (T, plane): an ω retune mid-job switches the
+                # codeword length, and the old-T entries simply stop being
+                # hit (a switch costs at most m re-encodes per side).
+                enc_a: dict[tuple[int, int], np.ndarray] = {}
+                enc_b: dict[tuple[int, int], np.ndarray] = {}
 
                 def encode_round(pi, pj):
+                    """Encode one round under the controller's *current*
+                    geometry; the returned buffer carries its own
+                    ``(code, kappa)`` so a later retune never orphans it —
+                    an already-encoded round dispatches and decodes with
+                    the geometry it was built for."""
                     ts = clock()
-                    Xa = enc_a.get(pi)
+                    rcode, rkappa = ctrl.code, ctrl.kappa
+                    T = rcode.num_tasks
+                    Xa = enc_a.get((T, pi))
                     if Xa is None:
-                        Xa = enc_a[pi] = code.encode_a(
+                        Xa = enc_a[(T, pi)] = rcode.encode_a(
                             np.asarray(ca[pi], np.float64))
-                    Yb = enc_b.get(pj)
+                    Yb = enc_b.get((T, pj))
                     if Yb is None:
-                        Yb = enc_b[pj] = code.encode_b(
+                        Yb = enc_b[(T, pj)] = rcode.encode_b(
                             np.asarray(cb[pj], np.float64))
                     stage["encode"] += clock() - ts
-                    return Xa, Yb
+                    return Xa, Yb, rcode, rkappa
 
-                def finish_round(rf, ridx, l, pi, pj):
+                def finish_round(rf, ridx, l, pi, pj, rcode):
                     """Decode a fused round, publish its layer if last.
 
                     Runs *behind* the next round's dispatch, so the layer
@@ -200,7 +237,7 @@ class Master:
                     measured delay free of next-round dispatch cost.
                     """
                     ts = clock()
-                    mini = rf.decode(code)
+                    mini = rf.decode(rcode)
                     tp = clock()
                     stage["decode"] += tp - ts
                     acc[...] += mini * float(1 << ((pi + pj) * cfg.d))
@@ -210,7 +247,7 @@ class Master:
 
                 # prime the pipeline: round 0's codeword + injected delays
                 nxt = encode_round(order[0][1], order[0][2])
-                nxt_delays = pool.sample_round_delays(kappa)
+                nxt_delays = pool.sample_round_delays(nxt[3])
                 pending = None        # fused-but-undecoded previous round
                 term = False
                 for ridx, (l, pi, pj) in enumerate(order):
@@ -218,12 +255,14 @@ class Master:
                         term = True   # don't dispatch a dead round
                         break
                     ctx = RoundContext(job.job_id, ridx)
-                    rf = self.fusion.begin_round(ctx, code.k)
+                    rf = self.fusion.begin_round(ctx, cfg.k)
+                    rcode = nxt[2]
                     ts = clock()
-                    pool.dispatch_round(ctx, nxt[0], nxt[1], kappa,
+                    pool.dispatch_round(ctx, nxt[0], nxt[1], nxt[3],
                                         delays=nxt_delays)
                     stage["dispatch"] += clock() - ts
                     rounds_timed += 1
+                    global_round += 1
                     nxt = None
                     # -- overlapped with this round's worker compute: --
                     # 1. decode the previous round, publish its layer
@@ -236,7 +275,7 @@ class Master:
                     if ridx + 1 < R:
                         _, npi, npj = order[ridx + 1]
                         nxt = encode_round(npi, npj)
-                        nxt_delays = pool.sample_round_delays(kappa)
+                        nxt_delays = pool.sample_round_delays(nxt[3])
                     elif (j + 1 < J and j + 1 not in prepared
                           and clock() >= t0 + jobs[j + 1].arrival):
                         ts = clock()
@@ -247,12 +286,29 @@ class Master:
                                else max(0.0, t_term - clock()))
                     ts = clock()
                     fused = rf.wait(timeout)
-                    stage["wait"] += clock() - ts
+                    tw = clock()
+                    stage["wait"] += tw - ts
                     ctx.purge()        # reclaim the round's stragglers
+                    # feed the controller this round's signals; a retune
+                    # takes effect from the NEXT encode (the buffered
+                    # round keeps the geometry it was encoded with)
+                    tc = clock()       # purge wake-ups stay out of the
+                    stale_now = self.fusion.stale_results   # control stage
+                    ctrl.observe(RoundObservation(
+                        round_idx=global_round - 1, job_id=job.job_id,
+                        wait=tw - ts, fused=bool(fused),
+                        stale=stale_now - prev_stale,
+                        deadline_margin=(None if t_term is None
+                                         else t_term - tw),
+                        rounds_left=R - ridx - 1,
+                        utilization=pool.busy_seconds
+                        / max(tw - t0, 1e-9)))
+                    prev_stale = stale_now
+                    stage["control"] += clock() - tc
                     if not fused:
                         term = True
                         break
-                    pending = (rf, ridx, l, pi, pj)
+                    pending = (rf, ridx, l, pi, pj, rcode)
                 if pending is not None:   # drain the decode-behind stage
                     finish_round(*pending)
                 end = clock()
@@ -281,11 +337,12 @@ class Master:
         result = metrics.RuntimeResult(
             arrivals=arrivals, starts=starts, ends=ends,
             layer_compute=layer_compute, success=success,
-            terminated=terminated, kappa=kappa,
+            terminated=terminated, kappa=kappa0,
             worker_busy=pool.busy_seconds, wall_elapsed=clock() - t0,
             stale_results=self.fusion.stale_results, released=released,
             verify_errors=verify_errors, stage_seconds=stage,
-            stage_rounds=rounds_timed)
+            stage_rounds=rounds_timed, controller=ctrl.summary(),
+            omega_trace=list(ctrl.trace))
         return result, futures
 
 

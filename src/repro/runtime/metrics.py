@@ -19,12 +19,15 @@ import numpy as np
 from repro.core import simulator
 
 __all__ = ["RuntimeResult", "delay_table", "format_delay_table",
-           "format_stage_table", "STAGES"]
+           "format_stage_table", "format_controller_trace", "STAGES"]
 
 #: Per-round pipeline stages the master accounts for.  ``wait`` is worker
-#: compute (the master blocks on fusion); everything else is master-side
-#: critical-path overhead the pipelined engine works to hide or shrink.
-STAGES = ("prep", "encode", "dispatch", "wait", "decode", "publish")
+#: compute (the master blocks on fusion); ``control`` is the ω-controller
+#: (observation build + policy step + any geometry switch); everything
+#: else is master-side critical-path overhead the pipelined engine works
+#: to hide or shrink.
+STAGES = ("prep", "encode", "dispatch", "wait", "decode", "publish",
+          "control")
 
 
 @dataclasses.dataclass
@@ -48,6 +51,17 @@ class RuntimeResult(simulator.SimResult):
                          does not inflate the critical path it hid behind.
     ``stage_rounds``     rounds dispatched (the divisor for per-round
                          stage costs).
+    ``controller``       the ω-controller's outcome summary (policy name,
+                         initial/final omega, retune/switch counts, total
+                         DecodePlan prime seconds) — present even for the
+                         static ``fixed`` policy (zero retunes).
+    ``omega_trace``      one dict per retune event (round, job, old/new
+                         omega and T, new kappa, reason, prime seconds);
+                         empty list when omega never moved.
+
+    ``kappa`` (inherited) is the eq. (1) split of the *initial* geometry;
+    under an adaptive policy the per-retune splits live in
+    ``omega_trace`` and the final one in ``controller``.
     """
 
     worker_busy: np.ndarray = dataclasses.field(
@@ -59,6 +73,8 @@ class RuntimeResult(simulator.SimResult):
     verify_errors: np.ndarray | None = None
     stage_seconds: dict | None = None
     stage_rounds: int = 0
+    controller: dict | None = None
+    omega_trace: list | None = None
 
     @property
     def utilization(self) -> np.ndarray:
@@ -127,6 +143,36 @@ def format_stage_table(result: "RuntimeResult") -> str:
     ov = result.per_round_overhead()
     lines.append(f"master-side overhead (encode+decode): "
                  f"{ov * 1e6:.1f} us/round over {result.stage_rounds} rounds")
+    return "\n".join(lines)
+
+
+def format_controller_trace(result: "RuntimeResult",
+                            max_rows: int = 24) -> str:
+    """The ω-controller's retune history, fixed-width for CLI output."""
+    ctl = result.controller
+    if not ctl:
+        return "(no controller summary recorded)"
+    head = (f"policy={ctl['policy']}  omega {ctl['omega_initial']:.2f} -> "
+            f"{ctl['omega_final']:.2f} (bounds "
+            f"[{ctl['omega_bounds'][0]:.2f}, {ctl['omega_bounds'][1]:.2f}])"
+            f"  retunes={ctl['retunes']}  geometry switches="
+            f"{ctl['switches']}  plan prime total "
+            f"{ctl['prime_seconds_total'] * 1e3:.2f} ms")
+    trace = result.omega_trace or []
+    if not trace:
+        return head + "\n(omega never moved)"
+    lines = [head,
+             f"{'round':>6} {'job':>5} {'omega':>13} {'T':>7} "
+             f"{'prime ms':>9}  reason"]
+    shown = trace if len(trace) <= max_rows else trace[:max_rows]
+    for ev in shown:
+        omega = f"{ev['omega_old']:.2f}->{ev['omega_new']:.2f}"
+        T = (f"{ev['T_old']}->{ev['T_new']}" if ev["switched"]
+             else str(ev["T_old"]))
+        lines.append(f"{ev['round']:>6} {ev['job']:>5} {omega:>13} {T:>7} "
+                     f"{ev['prime_seconds'] * 1e3:>9.3f}  {ev['reason']}")
+    if len(trace) > max_rows:
+        lines.append(f"... ({len(trace) - max_rows} more retunes)")
     return "\n".join(lines)
 
 

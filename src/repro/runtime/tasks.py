@@ -35,8 +35,16 @@ class RuntimeConfig:
     Mirrors :class:`repro.core.simulator.SystemConfig` where the concepts
     overlap (``mu``, ``arrival_rate``, ``m``, ``omega``, ``gamma``,
     ``complexity``) so measured runs validate directly against
-    ``simulate()``; adds the code geometry (``n1``, ``n2``, ``d``) and the
-    straggler-injection model that the simulator only samples.
+    ``simulate()`` (the paper's §IV system); adds the code geometry
+    (``n1``, ``n2``, ``d``), the straggler-injection model that the
+    simulator only samples, and the online redundancy controller
+    (``adapt``, see :mod:`repro.runtime.adaptive`).
+
+    Units: every duration field (``deadline``, ``stall_seconds``,
+    ``shift_at``, ``burst_period``, ``burst_len``) is wall-clock seconds;
+    ``arrival_rate`` and ``mu`` are per-second rates.  Instances are frozen
+    (hashable, safely shared across threads); all derived properties are
+    pure functions of the fields.
     """
 
     mu: tuple[float, ...] = (385.95, 650.92, 373.40, 415.75, 373.98)
@@ -49,20 +57,37 @@ class RuntimeConfig:
     gamma: float = 1.0             # eq. (1) moment trade-off
     complexity: float = 1.0        # per-task complexity (full, unlayered)
     deadline: Optional[float] = None   # seconds from service start
-    straggler: str = "none"        # "none" | "exp" | "stall"
-    stall_workers: tuple[int, ...] = ()   # worker ids pinned slow ("stall")
+    straggler: str = "none"        # "none"|"exp"|"stall"|"shift"|"burst"
+    stall_workers: tuple[int, ...] = ()   # worker ids that go dark
     stall_seconds: float = 30.0    # stall duration (>> any deadline)
+    shift_at: float = 0.0          # "shift": seconds until regime change
+    burst_period: float = 1.0      # "burst": seconds between burst starts
+    burst_len: float = 0.2        # "burst": stall window per period
+    adapt: str = "fixed"           # omega policy: adaptive.POLICIES key
+    omega_min: float = 1.0         # adaptive omega lower bound
+    omega_max: float = 3.0         # adaptive omega upper bound
     use_jax_devices: bool = False  # place per-worker compute on JAX devices
     seed: int = 0
 
     def __post_init__(self):
-        if self.straggler not in ("none", "exp", "stall"):
+        if self.straggler not in ("none", "exp", "stall", "shift", "burst"):
             raise ValueError(f"unknown straggler model {self.straggler!r}")
         if self.omega < 1.0:
             raise ValueError(f"redundancy ratio must be >= 1, got {self.omega}")
         if any(not 0 <= w < len(self.mu) for w in self.stall_workers):
             raise ValueError(f"stall_workers {self.stall_workers} out of "
                              f"range for {len(self.mu)} workers")
+        if not 1.0 <= self.omega_min <= self.omega_max:
+            raise ValueError(f"need 1 <= omega_min <= omega_max, got "
+                             f"[{self.omega_min}, {self.omega_max}]")
+        if self.straggler == "burst" and not (
+                0.0 < self.burst_len <= self.burst_period):
+            raise ValueError(f"need 0 < burst_len <= burst_period, got "
+                             f"{self.burst_len} / {self.burst_period}")
+        if self.straggler in ("shift", "burst") and not self.stall_workers:
+            raise ValueError(
+                f"straggler={self.straggler!r} needs stall_workers: with "
+                f"none, the regime change is a silent no-op (plain 'exp')")
 
     @property
     def num_workers(self) -> int:
@@ -89,9 +114,16 @@ class RuntimeConfig:
     def minijob_complexity(self) -> float:
         return self.complexity / (self.m * self.m)
 
-    def code(self) -> coding.PolynomialCode:
-        return coding.PolynomialCode(n1=self.n1, n2=self.n2, omega=self.omega,
-                                     mode="float")
+    def code(self, omega: Optional[float] = None) -> coding.PolynomialCode:
+        """The float-mode polynomial code for this geometry.
+
+        ``omega`` overrides the configured redundancy (same ``k``, different
+        codeword length ``T``) — how the adaptive controller materializes a
+        retuned geometry while everything else stays fixed.
+        """
+        return coding.PolynomialCode(
+            n1=self.n1, n2=self.n2,
+            omega=self.omega if omega is None else omega, mode="float")
 
     def to_system_config(self):
         """The §IV simulator configuration this runtime config realises.
@@ -106,12 +138,18 @@ class RuntimeConfig:
             complexity=self.complexity, m=self.m, omega=self.omega,
             gamma=self.gamma)
 
-    def load_split(self) -> np.ndarray:
-        """Eq. (1) integer task split kappa_p over workers (sum == T)."""
+    def load_split(self, total: Optional[int] = None) -> np.ndarray:
+        """Eq. (1) integer task split kappa_p over workers (sum == total).
+
+        ``total`` defaults to the configured ``total_tasks``; the adaptive
+        controller passes a retuned codeword length instead, recomputing
+        the split for the new ``T`` against the same worker moments.
+        """
         stats = [scheduling.worker_job_moments(mu, self.k,
                                                self.minijob_complexity)
                  for mu in self.mu]
-        return scheduling.load_split(stats, self.total_tasks, self.gamma)
+        return scheduling.load_split(
+            stats, self.total_tasks if total is None else total, self.gamma)
 
 
 @dataclasses.dataclass(frozen=True)

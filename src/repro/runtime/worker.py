@@ -12,6 +12,17 @@ pluggable straggler model:
 * ``"stall"`` — like ``"exp"`` but workers listed in ``stall_workers``
   freeze for ``stall_seconds`` per task (a dead/hogged node); redundancy
   (omega > 1) is what keeps rounds fusing without them.
+* ``"shift"`` — regime change: ``"exp"`` until ``shift_at`` seconds after
+  the first sample, then the ``stall_workers`` go dark (``stall_seconds``
+  per task) for the rest of the run — a node failure mid-run, the
+  scenario the adaptive omega controller exists for.
+* ``"burst"`` — recurring outages: the ``stall_workers`` go dark for the
+  first ``burst_len`` seconds of every ``burst_period``-second window,
+  ``"exp"`` otherwise — a periodically hogged/GC-ing node.
+
+The time-varying modes are wall-clock based (seconds since the model's
+first sample), so every variant of a sweep — static or adaptive omega —
+faces the same regime timeline against the same arrival trace.
 
 Workers wait out the injected delay on the round's ``cancel`` event, so a
 purge (round fused elsewhere, or job terminated) reclaims a delayed worker
@@ -39,18 +50,51 @@ clock = time.monotonic
 
 
 class StragglerModel:
-    """Samples per-task injected delays for each worker (master-side RNG)."""
+    """Samples per-task injected delays for each worker (master-side RNG).
+
+    Delays are in seconds.  The time-varying modes (``shift``/``burst``)
+    measure elapsed time from the model's first sample; the master
+    presamples each round's delays one round ahead, so a regime boundary
+    lands within ~one round of its nominal wall-clock instant.
+    """
 
     def __init__(self, cfg: RuntimeConfig, rng: np.random.Generator):
         self._cfg = cfg
         self._rng = rng
+        self._origin: float | None = None
+
+    def _elapsed(self) -> float:
+        """Seconds since the first sample (the regime clock)."""
+        now = clock()
+        if self._origin is None:
+            self._origin = now
+        return now - self._origin
+
+    def _stalled(self, worker_id: int) -> bool:
+        """Is this worker dark *right now* under the configured regime?"""
+        cfg = self._cfg
+        if worker_id not in cfg.stall_workers:
+            return False
+        if cfg.straggler == "stall":
+            return True
+        if cfg.straggler == "shift":
+            return self._elapsed() >= cfg.shift_at
+        if cfg.straggler == "burst":
+            return (self._elapsed() % cfg.burst_period) < cfg.burst_len
+        return False
 
     def sample(self, worker_id: int, num_tasks: int) -> np.ndarray:
         """(num_tasks,) delays in seconds for one worker's round queue."""
         cfg = self._cfg
+        if self._origin is None:
+            # anchor the regime clock on the run's FIRST sample, whoever
+            # it is for: a stall-listed worker can legitimately hold
+            # kappa = 0 (eq. 1), and anchoring lazily inside its own
+            # branch would silently delay or disable the regime change
+            self._origin = clock()
         if num_tasks == 0 or cfg.straggler == "none":
             return np.zeros(num_tasks)
-        if cfg.straggler == "stall" and worker_id in cfg.stall_workers:
+        if self._stalled(worker_id):
             return np.full(num_tasks, cfg.stall_seconds)
         scale = cfg.minijob_complexity / cfg.mu[worker_id]
         return self._rng.exponential(scale=scale, size=num_tasks)

@@ -1,0 +1,303 @@
+"""Online ω control: policy steps, controller geometry, regime-shift e2e.
+
+Policy/controller units run on synthetic observation traces (no threads);
+the end-to-end test runs the real engine through a mid-run worker outage
+and asserts the adaptive run strictly beats the worst static ω on
+deadline success rate — the ISSUE acceptance scenario, shrunk to test
+size.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.runtime import RuntimeConfig, run_jobs
+from repro.runtime.adaptive import (POLICIES, AIMDPolicy,
+                                    DeadlineMarginPolicy, FixedPolicy,
+                                    OmegaController, RoundObservation,
+                                    make_policy)
+
+MU3 = (400.0, 650.0, 380.0)
+
+
+def obs(round_idx=0, *, wait=0.01, fused=True, stale=0, margin=None,
+        rounds_left=3, job_id=0):
+    return RoundObservation(round_idx=round_idx, job_id=job_id, wait=wait,
+                            fused=fused, stale=stale,
+                            deadline_margin=margin, rounds_left=rounds_left)
+
+
+class TestPolicies:
+    def test_fixed_never_moves(self):
+        pol = FixedPolicy()
+        for i in range(10):
+            omega, reason = pol.step(obs(i, fused=(i % 2 == 0), stale=50,
+                                         margin=0.0), 1.5)
+            assert omega == 1.5 and reason is None
+
+    def test_aimd_grows_on_missed_deadline(self):
+        pol = AIMDPolicy(increase=0.25)
+        omega, reason = pol.step(obs(fused=False), 1.0)
+        assert omega == 1.25 and "missed" in reason
+
+    def test_aimd_grows_on_projected_miss(self):
+        """Remaining rounds at the observed wait EWMA overrun the margin."""
+        pol = AIMDPolicy(increase=0.25)
+        omega, reason = pol.step(
+            obs(wait=0.02, margin=0.01, rounds_left=3), 1.0)
+        assert omega == 1.25 and "projected" in reason
+
+    def test_aimd_shrinks_multiplicatively_on_stale_pileup(self):
+        pol = AIMDPolicy(decrease=0.8, stale_tolerance=1.0)
+        omega = 2.0
+        for i in range(12):      # EWMA of 3 stale/round crosses tolerance
+            omega, reason = pol.step(obs(i, stale=3), omega)
+            if reason is not None:
+                assert "stale" in reason
+                assert omega == pytest.approx(2.0 * 0.8)
+                return
+        pytest.fail("stale pile-up never triggered a shrink")
+
+    def test_aimd_comfortable_round_is_a_noop(self):
+        pol = AIMDPolicy()
+        omega, reason = pol.step(
+            obs(wait=0.001, margin=1.0, rounds_left=3, stale=0), 1.5)
+        assert omega == 1.5 and reason is None
+
+    def test_deadline_margin_grows_when_band_undershot(self):
+        pol = DeadlineMarginPolicy(low=1.5, step_up=0.25)
+        # margin ratio = 0.012 / (0.01 * 1) = 1.2 < 1.5
+        omega, reason = pol.step(
+            obs(wait=0.01, margin=0.012, rounds_left=1), 1.0)
+        assert omega == 1.25 and "margin ratio" in reason
+
+    def test_deadline_margin_shrinks_only_when_comfortable(self):
+        pol = DeadlineMarginPolicy(high=6.0, step_down=0.125,
+                                   stale_tolerance=1.0)
+        # tight margin + stale: the miss risk wins, no shrink
+        omega, reason = pol.step(
+            obs(wait=0.01, margin=0.02, rounds_left=1, stale=10), 2.0)
+        assert omega >= 2.0
+        pol2 = DeadlineMarginPolicy(high=6.0, step_down=0.125,
+                                    stale_tolerance=1.0)
+        # comfortable margin (ratio 100) + stale pile-up: shrink
+        omega, reason = pol2.step(
+            obs(wait=0.001, margin=0.1, rounds_left=1, stale=10), 2.0)
+        assert omega == pytest.approx(2.0 - 0.125) and "stale" in reason
+
+    def test_deadline_margin_grows_on_realized_miss(self):
+        pol = DeadlineMarginPolicy(step_up=0.25)
+        omega, reason = pol.step(obs(fused=False), 1.0)
+        assert omega == 1.25 and "missed" in reason
+
+    def test_policies_grow_without_a_deadline_on_wait_spike(self):
+        """No deadline => no miss/margin signal; a wait explosion (worker
+        outage) must still grow omega, or stale-driven shrinks would
+        ratchet it one-way to omega_min."""
+        for pol in (AIMDPolicy(), DeadlineMarginPolicy()):
+            for i in range(5):               # settle the wait EWMA ~5 ms
+                omega, _ = pol.step(obs(i, wait=0.005), 1.5)
+                assert omega == 1.5
+            omega, reason = pol.step(obs(9, wait=0.5), 1.5)
+            assert omega > 1.5 and "spike" in reason
+
+    def test_make_policy_resolves_names_and_instances(self):
+        assert isinstance(make_policy("aimd"), AIMDPolicy)
+        pol = DeadlineMarginPolicy()
+        assert make_policy(pol) is pol
+        assert isinstance(make_policy(None), FixedPolicy)
+        with pytest.raises(ValueError, match="unknown omega policy"):
+            make_policy("bogus")
+        assert set(POLICIES) == {"fixed", "aimd", "deadline-margin"}
+
+
+class TestController:
+    def _cfg(self, **kw):
+        kw.setdefault("mu", MU3)
+        kw.setdefault("omega", 1.0)
+        kw.setdefault("adapt", "aimd")
+        return RuntimeConfig(**kw)
+
+    def test_bounds_respected(self):
+        cfg = self._cfg(omega_min=1.0, omega_max=1.5)
+        ctrl = OmegaController(cfg)
+        for i in range(20):       # every round misses: growth is clipped
+            ctrl.observe(obs(i, fused=False))
+        assert ctrl.omega == 1.5
+        assert all(ev["omega_new"] <= 1.5 for ev in ctrl.trace)
+        # and shrink is floored at omega_min
+        ctrl2 = OmegaController(self._cfg(omega=1.0, omega_min=1.0))
+        for i in range(40):
+            ctrl2.observe(obs(i, stale=10))
+        assert ctrl2.omega >= 1.0
+
+    def test_geometry_switch_rebuilds_kappa_and_traces_prime(self):
+        cfg = self._cfg()
+        ctrl = OmegaController(cfg)
+        assert ctrl.total_tasks == 4 and ctrl.kappa.sum() == 4
+        switched = ctrl.observe(obs(fused=False))   # 1.0 -> 1.25, T 4 -> 5
+        assert switched and ctrl.total_tasks == 5
+        assert ctrl.kappa.sum() == 5
+        assert ctrl.switches == 1
+        ev = ctrl.trace[-1]
+        assert ev["switched"] and ev["T_old"] == 4 and ev["T_new"] == 5
+        assert ev["prime_seconds"] >= 0.0
+        assert ctrl.summary()["omega_final"] == 1.25
+
+    def test_omega_move_within_codeword_bucket_switches_nothing(self):
+        """ceil(4 * 1.5) == ceil(4 * 1.275) == 6: the retune is traced but
+        the geometry (and its DecodePlan) stays."""
+        cfg = self._cfg(omega=1.5, adapt="aimd")
+        ctrl = OmegaController(cfg, policy=AIMDPolicy(decrease=0.85,
+                                                      stale_tolerance=0.5))
+        code_before = ctrl.code
+        switched = ctrl.observe(obs(stale=10))
+        assert ctrl.omega == pytest.approx(1.275)
+        assert not switched and ctrl.switches == 0
+        assert ctrl.code is code_before
+        assert len(ctrl.trace) == 1 and not ctrl.trace[-1]["switched"]
+
+    def test_decode_plan_reused_across_geometry_round_trip(self):
+        """Growing away from a geometry and shrinking back must reuse the
+        process-wide per-geometry DecodePlan — the round trip's second
+        switch pays no Vandermonde rebuild."""
+        cfg = self._cfg(omega=1.0)
+        ctrl = OmegaController(cfg)
+        plan_t4 = ctrl.code.plan()
+        ctrl.observe(obs(0, fused=False))           # T 4 -> 5
+        plan_t5 = ctrl.code.plan()
+        assert plan_t5 is not plan_t4
+        for i in range(1, 60):                      # stale until back at 1.0
+            ctrl.observe(obs(i, stale=10))
+            if ctrl.total_tasks == 4:
+                break
+        assert ctrl.total_tasks == 4
+        assert ctrl.code.plan() is plan_t4          # same object, cached
+        # plans key on GEOMETRY, not the exact omega float: AIMD's
+        # multiplicative shrink rarely reproduces a prior omega, but
+        # constantly revisits prior codeword lengths
+        cfg_raw = RuntimeConfig(mu=MU3)
+        assert (cfg_raw.code(omega=1.3).plan()
+                is cfg_raw.code(omega=1.5).plan())  # both T = 6
+        # the plan's arrival-set operator LRU also survives the round trip
+        ids = tuple(range(4))
+        plan_t4.solve(ids, np.zeros((4, 2, 2)))
+        hits_before = plan_t4.cache_info()["hits"]
+        plan_t4.solve(ids, np.zeros((4, 2, 2)))
+        assert plan_t4.cache_info()["hits"] == hits_before + 1
+
+    def test_fixed_controller_is_static(self):
+        cfg = RuntimeConfig(mu=MU3, omega=1.5)      # adapt defaults fixed
+        ctrl = OmegaController(cfg)
+        for i in range(10):
+            assert not ctrl.observe(obs(i, fused=False, stale=50))
+        assert ctrl.omega == 1.5 and ctrl.trace == []
+        s = ctrl.summary()
+        assert s["policy"] == "fixed" and s["retunes"] == 0
+
+    def test_initial_omega_clipped_into_bounds(self):
+        cfg = self._cfg(omega=1.2, omega_min=1.5, omega_max=2.0)
+        ctrl = OmegaController(cfg)
+        assert ctrl.omega == 1.5
+
+    def test_fixed_policy_ignores_inert_adaptive_bounds(self):
+        """Static runs must use cfg.omega verbatim — simulator agreement
+        depends on the measured geometry matching to_system_config() —
+        even when omega sits outside the (unused) adaptive bounds."""
+        cfg = RuntimeConfig(mu=MU3, omega=4.0)      # > default omega_max
+        ctrl = OmegaController(cfg)
+        assert ctrl.omega == 4.0
+        assert ctrl.total_tasks == cfg.total_tasks == 16
+
+    def test_config_rejects_bad_bounds_and_bursts(self):
+        with pytest.raises(ValueError, match="omega_min"):
+            RuntimeConfig(mu=MU3, omega_min=2.0, omega_max=1.5)
+        with pytest.raises(ValueError, match="burst_len"):
+            RuntimeConfig(mu=MU3, straggler="burst", burst_len=2.0,
+                          burst_period=1.0, stall_workers=(1,))
+        # shift/burst without stall_workers would be a silent no-op
+        for mode in ("shift", "burst"):
+            with pytest.raises(ValueError, match="stall_workers"):
+                RuntimeConfig(mu=MU3, straggler=mode)
+
+
+class TestTimeVaryingStragglers:
+    def test_shift_regime_flips_at_shift_at(self):
+        from repro.runtime.worker import StragglerModel
+        cfg = RuntimeConfig(mu=MU3, complexity=8.0, straggler="shift",
+                            stall_workers=(2,), shift_at=3600.0,
+                            stall_seconds=9.0)
+        sm = StragglerModel(cfg, np.random.default_rng(0))
+        assert (sm.sample(2, 4) < 9.0).all()        # pre-shift: exp draws
+        sm2 = StragglerModel(dataclasses.replace(cfg, shift_at=0.0),
+                             np.random.default_rng(0))
+        assert (sm2.sample(2, 4) == 9.0).all()      # post-shift: dark
+        assert (sm2.sample(0, 4) < 9.0).all()       # others unaffected
+
+    def test_regime_clock_anchors_on_any_first_sample(self):
+        """A stall-listed worker can hold kappa = 0 (eq. 1 at omega = 1);
+        the regime clock must anchor on the run's first sample for ANY
+        worker, not lazily inside the stalled worker's own branch."""
+        from repro.runtime.worker import StragglerModel
+        cfg = RuntimeConfig(mu=MU3, complexity=8.0, straggler="shift",
+                            stall_workers=(2,), shift_at=0.0,
+                            stall_seconds=9.0)
+        sm = StragglerModel(cfg, np.random.default_rng(0))
+        sm.sample(0, 2)                             # worker 2 never sampled
+        assert sm._origin is not None               # clock runs anyway
+        assert (sm.sample(2, 3) == 9.0).all()       # outage on schedule
+
+    def test_burst_windows_gate_the_stall(self):
+        from repro.runtime.worker import StragglerModel
+        cfg = RuntimeConfig(mu=MU3, complexity=8.0, straggler="burst",
+                            stall_workers=(2,), burst_period=3600.0,
+                            burst_len=3600.0, stall_seconds=9.0)
+        sm = StragglerModel(cfg, np.random.default_rng(0))
+        assert (sm.sample(2, 4) == 9.0).all()       # inside the window
+        cfg2 = dataclasses.replace(cfg, burst_len=1e-9)
+        sm2 = StragglerModel(cfg2, np.random.default_rng(0))
+        sm2._origin = -3600.0                       # far past the window
+        assert (sm2.sample(2, 4) < 9.0).all()
+
+
+class TestEndToEndRegimeShift:
+    """The acceptance scenario at test size: a worker outage mid-run.
+
+    At omega=1.0 (T = k) every worker's task is fusion-critical, so the
+    outage starves every post-shift round until §IV termination; the
+    adaptive run grows omega within a job or two of the shift and keeps
+    releasing resolution 0.
+    """
+
+    def _base(self, adapt):
+        return RuntimeConfig(mu=MU3, arrival_rate=14.0, omega=1.0,
+                             complexity=8.0, deadline=0.04,
+                             straggler="shift", stall_workers=(2,),
+                             shift_at=0.6, stall_seconds=1.0,
+                             adapt=adapt, seed=0)
+
+    @pytest.mark.parametrize("policy", ["aimd", "deadline-margin"])
+    def test_adaptive_beats_worst_static_on_success_rate(self, policy):
+        worst, _ = run_jobs(self._base("fixed"), 24, K=64, M=8, N=8)
+        adapt, _ = run_jobs(self._base(policy), 24, K=64, M=8, N=8)
+        sr_worst = worst.success_rate()[0]
+        sr_adapt = adapt.success_rate()[0]
+        assert sr_worst < 0.85           # the outage really binds at T = k
+        assert sr_adapt >= sr_worst + 0.15
+        ctl = adapt.controller
+        assert ctl["policy"] == policy
+        assert ctl["switches"] >= 1 and ctl["omega_final"] > 1.0
+        assert len(adapt.omega_trace) == ctl["retunes"] >= 1
+        # controller time is accounted and the trace records prime costs
+        assert adapt.stage_seconds["control"] >= 0.0
+        assert ctl["prime_seconds_total"] >= 0.0
+
+    def test_adaptive_run_still_decode_verifies(self):
+        """Geometry switches mid-run must not corrupt decodes: every
+        released resolution still matches the exact layered oracle."""
+        res, _ = run_jobs(self._base("aimd"), 12, K=64, M=8, N=8,
+                          verify=True)
+        errs = res.verify_errors[np.isfinite(res.verify_errors)]
+        assert errs.size and errs.max() < 1e-9
+        assert res.controller["switches"] >= 1
