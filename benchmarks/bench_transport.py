@@ -1,0 +1,159 @@
+"""Transport benchmark: per-backend overhead + delay under real stragglers.
+
+Measures, for each worker transport (thread / process; jax is CPU-smoke
+hardware-dependent and excluded from the comparison by default):
+
+1. **Dispatch + fusion overhead per round** — a no-delay, no-deadline run
+   where worker compute is ~free, so wall time per round is dominated by
+   the transport's submit → compute → return-path cost (pipe serialization
+   and drain-thread hop for the process backend vs direct calls for the
+   thread backend), plus the measured per-stage dispatch cost.
+2. **res-0 vs final-resolution delay** under the ``exp`` and ``shift``
+   straggler regimes — the paper's layered-resolution story measured over
+   real parallelism: identical master-side RNG means both backends face
+   the same injected straggler trace.
+3. **The Fig. 5 qualitative claim on the process backend** — a deadline
+   chosen so the *final* resolution misses on a meaningful fraction of
+   jobs while res-0 still lands: early resolutions beat a deadline the
+   full computation cannot, on genuinely GIL-free workers.
+
+Emits ``BENCH_transport.json``.
+
+Run:  PYTHONPATH=src python benchmarks/bench_transport.py --jobs 120
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.runtime import RuntimeConfig, delay_table, format_delay_table, \
+    run_jobs
+
+MU = (385.95, 650.92, 373.40, 415.75, 373.98)   # the paper's §IV cluster
+COMPARE_BACKENDS = ("thread", "process")
+
+
+def _run(cfg: RuntimeConfig, jobs: int) -> dict:
+    t0 = time.perf_counter()
+    result, _ = run_jobs(cfg, jobs, K=64, M=8, N=8)
+    wall = time.perf_counter() - t0
+    s = result.stage_seconds or {}
+    rounds = max(result.stage_rounds, 1)
+    rows = delay_table(result)
+    return {
+        "backend": result.backend,
+        "jobs": jobs,
+        "wall_seconds": round(wall, 3),
+        "rounds": result.stage_rounds,
+        "dispatch_us_per_round": round(s.get("dispatch", 0.0) / rounds * 1e6,
+                                       2),
+        "wait_us_per_round": round(s.get("wait", 0.0) / rounds * 1e6, 2),
+        "master_overhead_us_per_round": round(
+            result.per_round_overhead() * 1e6, 2),
+        "stale_results": int(result.stale_results),
+        "terminated": int(result.terminated.sum()),
+        "success_rate": [round(float(x), 4) for x in result.success_rate()],
+        "res0_mean_delay": rows[0]["mean_delay"],
+        "final_mean_delay": rows[-1]["mean_delay"],
+        "delay_per_resolution": rows,
+        "worker_utilization": [round(float(u), 4)
+                               for u in result.utilization],
+    }
+
+
+def bench_overhead(jobs: int) -> list[dict]:
+    """No injected delay: per-round wall cost IS the transport overhead."""
+    out = []
+    for backend in COMPARE_BACKENDS:
+        cfg = RuntimeConfig(mu=MU, arrival_rate=1000.0, complexity=0.2,
+                            straggler="none", backend=backend, seed=0)
+        r = _run(cfg, jobs)
+        # with zero injected delay, (dispatch + wait) per round is the
+        # submit -> compute -> fuse round-trip latency of the transport
+        r["roundtrip_us_per_round"] = round(
+            r["dispatch_us_per_round"] + r["wait_us_per_round"], 2)
+        out.append(r)
+        print(f"[overhead] {backend:>8}: dispatch "
+              f"{r['dispatch_us_per_round']:>8.1f} us/round, roundtrip "
+              f"{r['roundtrip_us_per_round']:>8.1f} us/round, wall "
+              f"{r['wall_seconds']:.2f} s")
+    return out
+
+
+def bench_regimes(jobs: int) -> list[dict]:
+    """res-0 / final delay, thread vs process, exp and shift regimes."""
+    regimes = {
+        "exp": dict(arrival_rate=12.0, complexity=10.0, straggler="exp"),
+        "shift": dict(arrival_rate=12.0, complexity=10.0, straggler="shift",
+                      stall_workers=(4,), shift_at=1.0, stall_seconds=2.0,
+                      deadline=0.060),
+    }
+    out = []
+    for regime, kw in regimes.items():
+        for backend in COMPARE_BACKENDS:
+            cfg = RuntimeConfig(mu=MU, backend=backend, seed=3, **kw)
+            r = _run(cfg, jobs)
+            r["regime"] = regime
+            out.append(r)
+            print(f"[{regime:>5}] {backend:>8}: res0 "
+                  f"{r['res0_mean_delay'] * 1e3:7.2f} ms, final "
+                  f"{r['final_mean_delay'] * 1e3:7.2f} ms, success "
+                  f"{r['success_rate']}")
+    return out
+
+
+def bench_deadline_race(jobs: int) -> dict:
+    """Fig. 5 qualitative claim, process backend: res-0 beats a deadline
+    the final resolution misses."""
+    cfg = RuntimeConfig(mu=MU, arrival_rate=14.0, complexity=10.0,
+                        deadline=0.035, straggler="exp", backend="process",
+                        seed=1)
+    r = _run(cfg, jobs)
+    r["scenario"] = "deadline-race"
+    res0_ok = r["success_rate"][0]
+    final_ok = r["success_rate"][-1]
+    r["fig5_claim_holds"] = bool(res0_ok >= 0.95 and final_ok < 1.0)
+    print(f"[deadline-race] process: res0 success {res0_ok:.3f}, final "
+          f"success {final_ok:.3f}, claim holds: {r['fig5_claim_holds']}")
+    print(format_delay_table(r["delay_per_resolution"]))
+    return r
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--jobs", type=int, default=120)
+    ap.add_argument("--out", default="BENCH_transport.json")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if the fig5 qualitative claim "
+                         "fails (a probabilistic wall-clock property: use "
+                         "locally for acceptance runs, not on shared CI "
+                         "runners where a noisy neighbor can flip it)")
+    args = ap.parse_args(argv)
+
+    report = {
+        "bench": "transport",
+        "jobs": args.jobs,
+        "mu": list(MU),
+        "overhead": bench_overhead(args.jobs),
+        "regimes": bench_regimes(args.jobs),
+        "deadline_race": bench_deadline_race(args.jobs),
+    }
+    path = pathlib.Path(args.out)
+    path.write_text(json.dumps(report, indent=2))
+    print(f"\nwrote {path}")
+    if not report["deadline_race"]["fig5_claim_holds"]:
+        print("WARNING: fig5 qualitative claim did not hold on this host "
+              "(res-0 under deadline while final misses); inspect the "
+              "delay table above")
+        return 1 if args.strict else 0
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

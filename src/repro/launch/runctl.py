@@ -25,9 +25,9 @@ import pathlib
 import numpy as np
 
 from repro.core import simulator
-from repro.runtime import (POLICIES, RuntimeConfig, delay_table,
-                           format_controller_trace, format_delay_table,
-                           format_stage_table, run_jobs)
+from repro.runtime import (BACKEND_NAMES, POLICIES, RuntimeConfig,
+                           delay_table, format_controller_trace,
+                           format_delay_table, format_stage_table, run_jobs)
 
 __all__ = ["main", "build_config", "summarize"]
 
@@ -51,7 +51,7 @@ def build_config(args: argparse.Namespace) -> RuntimeConfig:
         shift_at=args.shift_at if args.shift_at is not None else 0.0,
         burst_period=args.burst_period, burst_len=args.burst_len,
         adapt=args.adapt, omega_min=args.omega_min,
-        omega_max=args.omega_max,
+        omega_max=args.omega_max, backend=args.backend,
         use_jax_devices=args.jax_devices, seed=args.seed)
 
 
@@ -65,7 +65,9 @@ def summarize(cfg: RuntimeConfig, result) -> dict:
             "d": cfg.d, "gamma": cfg.gamma, "complexity": cfg.complexity,
             "deadline": cfg.deadline, "straggler": cfg.straggler,
             "stall_workers": list(cfg.stall_workers), "seed": cfg.seed,
+            "backend": cfg.backend,
         },
+        "backend": result.backend,
         "num_jobs": int(result.num_jobs),
         "kappa": [int(x) for x in result.kappa],
         "delay_per_resolution": rows,
@@ -130,8 +132,12 @@ def main(argv=None) -> int:
                          "redundancy)")
     ap.add_argument("--omega-min", type=float, default=1.0)
     ap.add_argument("--omega-max", type=float, default=3.0)
+    ap.add_argument("--backend", choices=BACKEND_NAMES, default="thread",
+                    help="worker transport: thread (in-process pool), "
+                         "process (multiprocessing workers, GIL-free), or "
+                         "jax (one thread worker per local JAX device)")
     ap.add_argument("--jax-devices", action="store_true",
-                    help="place per-worker compute on JAX devices")
+                    help="legacy alias for --backend jax")
     ap.add_argument("--K", type=int, default=64)
     ap.add_argument("--M", type=int, default=8)
     ap.add_argument("--N", type=int, default=8)
@@ -155,12 +161,16 @@ def main(argv=None) -> int:
     if args.straggler in ("shift", "burst") and not _ints(args.stall_workers):
         ap.error(f"--straggler {args.straggler} needs --stall-workers: "
                  f"with none listed, the regime change is a no-op")
+    if args.jax_devices and args.backend not in ("thread", "jax"):
+        ap.error(f"--jax-devices is a legacy alias for --backend jax and "
+                 f"conflicts with --backend {args.backend}")
 
     cfg = build_config(args)
-    print(f"[runctl] {cfg.num_workers} workers, k={cfg.k} of "
-          f"T={cfg.total_tasks} coded tasks/round, {cfg.num_rounds} rounds, "
-          f"L={cfg.num_layers} resolutions, straggler={cfg.straggler}, "
-          f"deadline={cfg.deadline}, adapt={cfg.adapt}")
+    print(f"[runctl] {cfg.num_workers} workers ({cfg.backend} backend), "
+          f"k={cfg.k} of T={cfg.total_tasks} coded tasks/round, "
+          f"{cfg.num_rounds} rounds, L={cfg.num_layers} resolutions, "
+          f"straggler={cfg.straggler}, deadline={cfg.deadline}, "
+          f"adapt={cfg.adapt}")
     result, _ = run_jobs(cfg, args.jobs, K=args.K, M=args.M, N=args.N,
                          verify=not args.no_verify)
     print(f"[runctl] kappa (eq.1 split): {result.kappa.tolist()}  "

@@ -9,6 +9,12 @@ releasing the highest completed layer.
 
 On CPU the "budget" is measured in *resolution layers* rather than
 wall-time (deterministic tests); ``--deadline-ms`` switches to wall-clock.
+The wall-clock path is driven by :class:`PlaneBudgetController` — the
+runtime engine's deadline-margin policy signal
+(:func:`repro.runtime.adaptive.margin_ratio`) applied per decode step:
+instead of reactively checking whether the deadline has *already* passed,
+the server predicts whether the next plane's projected cost still fits
+the remaining margin, and stops issuing planes the step before a miss.
 """
 
 from __future__ import annotations
@@ -26,8 +32,54 @@ from repro.configs import registry
 from repro.configs.base import ModelConfig
 from repro.core import progressive
 from repro.models import transformer as T
+from repro.runtime.adaptive import margin_ratio
 
-__all__ = ["ProgressiveServer", "main"]
+__all__ = ["ProgressiveServer", "PlaneBudgetController", "main"]
+
+
+class PlaneBudgetController:
+    """Per-step plane budget from the runtime's deadline-margin signal.
+
+    The serving twin of the runtime's ``deadline-margin`` ω-policy,
+    sharing its margin arithmetic (:func:`repro.runtime.adaptive.
+    margin_ratio`): the work unit is one MSB-first head plane instead of
+    one mini-job round, and the control action is "issue the next plane
+    or release now" instead of retuning ω.  An EWMA of measured per-plane
+    seconds (persistent across decode steps — plane cost is stationary)
+    projects the next plane's cost; the plane is issued only while the
+    projected cost fits the remaining margin (``ratio >= low``).  Plane 0
+    is always computed — releasing *something* is the §IV contract.
+    """
+
+    def __init__(self, deadline_ms: float, *, low: float = 1.0,
+                 alpha: float = 0.3):
+        if deadline_ms < 0.0:
+            raise ValueError(f"deadline_ms must be >= 0, got {deadline_ms}")
+        self.deadline = deadline_ms / 1e3   # seconds
+        self.low = low
+        self.alpha = alpha
+        self._plane_ewma: Optional[float] = None
+        self._t0 = 0.0
+
+    def begin_step(self) -> None:
+        """Start one decode step's clock."""
+        self._t0 = time.perf_counter()
+
+    def observe_plane(self, seconds: float) -> None:
+        """Feed one plane's measured wall cost into the EWMA."""
+        self._plane_ewma = (seconds if self._plane_ewma is None
+                            else (1.0 - self.alpha) * self._plane_ewma
+                            + self.alpha * seconds)
+
+    def should_continue(self) -> bool:
+        """Issue the next plane?  Shared margin math, one unit of work."""
+        margin = self.deadline - (time.perf_counter() - self._t0)
+        ratio = margin_ratio(margin, self._plane_ewma, 1)
+        if ratio is None:
+            # no cost estimate yet (first plane of the first step failed
+            # to record?) — fall back to the reactive check
+            return margin > 0.0
+        return ratio >= self.low
 
 
 @dataclasses.dataclass
@@ -115,6 +167,7 @@ class ProgressiveServer:
                 self.lm_head, h.astype(jnp.float32), l, acc))
 
         self._plane_fns = [make_plane_fn(l) for l in range(self.m)]
+        self._warm_plane_shapes: set = set()
 
     def prefill(self, tokens, max_len: int, **extras):
         return T.prefill(self.params, tokens, self.cfg, max_len=max_len,
@@ -130,25 +183,46 @@ class ProgressiveServer:
                 "layer_budget and deadline_ms are mutually exclusive "
                 "budgets; pass one or the other")
         stats = ServeStats()
+        budget: Optional[PlaneBudgetController] = None
         tok = tokens
         out = []
         for i in range(num_tokens):
             pos = jnp.int32(start_pos + i)
             hidden, caches = self._hidden_step(self.params, tok, caches, pos)
             if deadline_ms is not None:
-                # Incremental MSB-first accumulation: the deadline bounds
-                # the compute actually performed — once it passes, no
-                # further plane matmul is issued and the partial sum (a
-                # valid Definition-1 resolution) is released as-is.
-                t0 = time.perf_counter()
+                # Incremental MSB-first accumulation under the runtime's
+                # deadline-margin policy signal: after each plane, the
+                # budget controller projects the next plane's cost (EWMA,
+                # persistent across steps) against the remaining margin
+                # and stops issuing planes the step BEFORE a predicted
+                # miss — the partial sum (a valid Definition-1
+                # resolution) is released as-is.
+                warm_key = (hidden.shape, str(hidden.dtype))
+                if warm_key not in self._warm_plane_shapes:
+                    # compile every plane fn off the clock: a first call's
+                    # cost is XLA compilation, not plane compute — timed,
+                    # it would poison the persistent EWMA and suppress
+                    # higher resolutions for many subsequent steps.  Keyed
+                    # by operand shape/dtype because jit caching is.
+                    warm = None
+                    for fn in self._plane_fns:
+                        warm = fn(hidden) if warm is None else fn(hidden,
+                                                                  warm)
+                    jax.block_until_ready(warm)
+                    self._warm_plane_shapes.add(warm_key)
+                if budget is None:
+                    budget = PlaneBudgetController(deadline_ms)
+                budget.begin_step()
                 acc = None
                 release = 0
                 for l in range(self.m):
+                    tp = time.perf_counter()
                     acc = (self._plane_fns[l](hidden) if acc is None
                            else self._plane_fns[l](hidden, acc))
                     jax.block_until_ready(acc)
+                    budget.observe_plane(time.perf_counter() - tp)
                     release = l + 1
-                    if (time.perf_counter() - t0) * 1e3 >= deadline_ms:
+                    if release < self.m and not budget.should_continue():
                         break
                 logits = acc * self.lm_head.scale
             else:

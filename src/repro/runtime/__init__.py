@@ -20,23 +20,35 @@ Quickstart::
 from repro.runtime.adaptive import (POLICIES, AIMDPolicy,
                                     DeadlineMarginPolicy, FixedPolicy,
                                     OmegaController, OmegaPolicy,
-                                    RoundObservation)
+                                    RoundObservation, margin_ratio)
 from repro.runtime.fusion import FusionNode, LayeredResult, RoundFusion
 from repro.runtime.master import Master, make_jobs, run_jobs
 from repro.runtime.metrics import (STAGES, RuntimeResult, delay_table,
                                    format_controller_trace,
                                    format_delay_table, format_stage_table)
-from repro.runtime.tasks import (JobSpec, RoundBatch, RoundContext,
-                                 RuntimeConfig, TaskResult)
-from repro.runtime.worker import StragglerModel, Worker, WorkerPool
+from repro.runtime.tasks import (BACKEND_NAMES, JobSpec, RoundBatch,
+                                 RoundContext, RuntimeConfig, TaskResult,
+                                 WireBatch)
+# NOTE: the concrete backend classes (ThreadTransport / ProcessTransport /
+# JaxDeviceTransport) are deliberately NOT re-exported here — importing
+# them eagerly would materialize every backend module (multiprocessing
+# plumbing included) on every `import repro.runtime`, defeating the
+# transport package's lazy registry.  Reach them via
+# `repro.runtime.transport.<Name>` (lazy, PEP 562) or `BACKENDS[name]`.
+from repro.runtime.transport import (BACKENDS, WorkerTransport,
+                                     make_transport)
+from repro.runtime.worker import (BatchRunner, StragglerModel, Worker,
+                                  WorkerPool, make_compute)
 
 __all__ = [
     "RuntimeConfig", "JobSpec", "RoundContext", "RoundBatch", "TaskResult",
-    "Worker", "WorkerPool", "StragglerModel",
+    "WireBatch", "BACKEND_NAMES",
+    "Worker", "WorkerPool", "StragglerModel", "BatchRunner", "make_compute",
+    "WorkerTransport", "BACKENDS", "make_transport",
     "FusionNode", "RoundFusion", "LayeredResult",
     "Master", "make_jobs", "run_jobs",
     "OmegaController", "OmegaPolicy", "RoundObservation", "POLICIES",
-    "FixedPolicy", "AIMDPolicy", "DeadlineMarginPolicy",
+    "FixedPolicy", "AIMDPolicy", "DeadlineMarginPolicy", "margin_ratio",
     "RuntimeResult", "delay_table", "format_delay_table",
     "format_stage_table", "format_controller_trace", "STAGES",
 ]

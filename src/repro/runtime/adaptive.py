@@ -60,7 +60,30 @@ import numpy as np
 
 __all__ = ["RoundObservation", "OmegaPolicy", "FixedPolicy", "AIMDPolicy",
            "DeadlineMarginPolicy", "OmegaController", "POLICIES",
-           "make_policy"]
+           "make_policy", "margin_ratio"]
+
+
+def margin_ratio(margin: Optional[float], unit_ewma: Optional[float],
+                 units_left: int) -> Optional[float]:
+    """The §IV deadline-margin ratio, shared across consumers.
+
+    ``margin`` seconds remain before the deadline; ``units_left`` units of
+    work (mini-job rounds for the runtime, head planes for serving) are
+    still to run, each projected to take ``unit_ewma`` seconds.  The ratio
+    is *how many projected remainders fit in the time left* — < 1 means a
+    predicted miss.  Returns None when undefined (no deadline, no work
+    left, or no cost estimate yet); callers treat None as "no signal".
+
+    Both :class:`DeadlineMarginPolicy` (retuning ω between rounds) and the
+    serving plane-budget adapter
+    (:class:`repro.launch.serve.PlaneBudgetController`) lean on this one
+    function, so the runtime and the serving path act on the same margin
+    arithmetic.
+    """
+    if (margin is None or units_left <= 0 or unit_ewma is None
+            or unit_ewma <= 0.0):
+        return None
+    return margin / (unit_ewma * units_left)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,10 +282,8 @@ class DeadlineMarginPolicy(_EwmaPolicy):
         self._last_ratio: Optional[float] = None
 
     def _margin_ratio(self, obs) -> Optional[float]:
-        if (obs.deadline_margin is None or obs.rounds_left <= 0
-                or not self._wait_ewma or self._wait_ewma <= 0.0):
-            return None
-        return obs.deadline_margin / (self._wait_ewma * obs.rounds_left)
+        return margin_ratio(obs.deadline_margin, self._wait_ewma or None,
+                            obs.rounds_left)
 
     def _grow_reason(self, obs):
         self._last_ratio = ratio = self._margin_ratio(obs)

@@ -7,6 +7,14 @@ round's stragglers.  Late results from a purged round are dropped and
 counted (``stale_results``) — the runtime analogue of the simulator
 sampling round durations as the k-th order statistic.
 
+:meth:`FusionNode.post` is the transport-facing sink: in-process backends
+call it straight from their worker threads, remote backends from the
+transport's result drain thread.  It is safe from any number of posting
+threads concurrently with the master's ``begin_round``; a result's round
+identity is checked against the current round *and* its (master-side)
+cancel event, so a purge is effective even before the remote worker has
+seen the purge message.
+
 :class:`LayeredResult` is the job's progressive future: a consumer can
 block on *any* resolution independently (``wait_resolution``), read the
 best resolution available right now (``best_resolution``), or wait for the

@@ -3,7 +3,10 @@
 A measured, genuinely-concurrent execution of the system the simulator
 models: jobs arrive (Poisson or trace), are served FIFO one at a time
 (the paper's single-master discipline), and each job's ``m**2`` coded
-mini-job rounds run MSB-first on the worker pool:
+mini-job rounds run MSB-first on an abstract
+:class:`~repro.runtime.transport.base.WorkerTransport` — thread workers,
+multiprocessing workers, or JAX-device workers, selected by
+``RuntimeConfig.backend``; the loop below is identical over all of them:
 
 1. service start — operands are quantized (floats) and digit-decomposed;
 2. per round, the mini-job's plane pair is polynomial-encoded
@@ -59,7 +62,8 @@ from repro.runtime import metrics
 from repro.runtime.adaptive import OmegaController, RoundObservation
 from repro.runtime.fusion import FusionNode, LayeredResult
 from repro.runtime.tasks import JobSpec, RoundContext, RuntimeConfig
-from repro.runtime.worker import WorkerPool, clock
+from repro.runtime.transport import make_transport
+from repro.runtime.worker import clock
 
 __all__ = ["Master", "make_jobs", "run_jobs"]
 
@@ -88,15 +92,21 @@ def make_jobs(cfg: RuntimeConfig, num_jobs: int, *, K: int = 64, M: int = 8,
 
 
 class Master:
-    """Event loop owning the worker pool, fusion node, and ω-controller.
+    """Event loop owning the worker transport, fusion node, and
+    ω-controller.
 
     Single-threaded driver: :meth:`run` is meant to be called once, from
-    one thread — it spawns the worker pool, blocks until every job is
-    served, and shuts the pool down.  The only cross-thread surfaces are
-    the :class:`~repro.runtime.fusion.LayeredResult` futures it returns
+    one thread — it starts the configured worker transport
+    (``cfg.backend``: thread / process / jax, via
+    :func:`repro.runtime.transport.make_transport`), blocks until every
+    job is served, and shuts the transport down (purge-mode: every
+    submitted round is already fused or terminated by then).  The only
+    cross-thread surfaces are the
+    :class:`~repro.runtime.fusion.LayeredResult` futures it returns
     (consumable concurrently while the run progresses) and the fusion
-    node's result sink.  All reported times are seconds
-    (``time.monotonic`` deltas from the run start).
+    node's result sink, which remote transports pump from a drain
+    thread.  All reported times are seconds (``time.monotonic`` deltas
+    from the run start).
 
     The code geometry is owned by an
     :class:`~repro.runtime.adaptive.OmegaController` (``cfg.adapt`` picks
@@ -154,8 +164,8 @@ class Master:
         if J == 0:
             raise ValueError("need at least one job")
 
-        pool = WorkerPool(cfg, sink=self.fusion.post,
-                          rng=np.random.default_rng(cfg.seed + 1))
+        pool = make_transport(cfg, sink=self.fusion.post,
+                              rng=np.random.default_rng(cfg.seed + 1))
         pool.start()
         self._warmup(jobs[0])
 
@@ -258,8 +268,8 @@ class Master:
                     rf = self.fusion.begin_round(ctx, cfg.k)
                     rcode = nxt[2]
                     ts = clock()
-                    pool.dispatch_round(ctx, nxt[0], nxt[1], nxt[3],
-                                        delays=nxt_delays)
+                    pool.submit_round(ctx, nxt[0], nxt[1], nxt[3],
+                                      delays=nxt_delays)
                     stage["dispatch"] += clock() - ts
                     rounds_timed += 1
                     global_round += 1
@@ -282,13 +292,20 @@ class Master:
                         prepared[j + 1] = self._prepare(jobs[j + 1])
                         stage["prep"] += clock() - ts
                     # ---------------------------------------------------
-                    timeout = (None if t_term is None
-                               else max(0.0, t_term - clock()))
                     ts = clock()
-                    fused = rf.wait(timeout)
+                    if t_term is None:
+                        # unbounded wait: slice it so a worker that died
+                        # (OOM-kill, crashed child) raises promptly via
+                        # the transport's liveness check instead of
+                        # blocking the run forever on a round that can no
+                        # longer reach k results
+                        while not (fused := rf.wait(5.0)):
+                            pool.assert_alive()
+                    else:
+                        fused = rf.wait(max(0.0, t_term - clock()))
                     tw = clock()
                     stage["wait"] += tw - ts
-                    ctx.purge()        # reclaim the round's stragglers
+                    pool.purge_round(ctx)  # reclaim the round's stragglers
                     # feed the controller this round's signals; a retune
                     # takes effect from the NEXT encode (the buffered
                     # round keeps the geometry it was encoded with)
@@ -342,7 +359,7 @@ class Master:
             stale_results=self.fusion.stale_results, released=released,
             verify_errors=verify_errors, stage_seconds=stage,
             stage_rounds=rounds_timed, controller=ctrl.summary(),
-            omega_trace=list(ctrl.trace))
+            omega_trace=list(ctrl.trace), backend=pool.name)
         return result, futures
 
 

@@ -58,6 +58,10 @@ class RuntimeResult(simulator.SimResult):
     ``omega_trace``      one dict per retune event (round, job, old/new
                          omega and T, new kappa, reason, prime seconds);
                          empty list when omega never moved.
+    ``backend``          the worker transport that executed the run
+                         (``thread`` / ``process`` / ``jax``) — the
+                         effective backend, after any legacy-flag
+                         upgrade, for bench/JSON provenance.
 
     ``kappa`` (inherited) is the eq. (1) split of the *initial* geometry;
     under an adaptive policy the per-retune splits live in
@@ -75,6 +79,7 @@ class RuntimeResult(simulator.SimResult):
     stage_rounds: int = 0
     controller: dict | None = None
     omega_trace: list | None = None
+    backend: str = "thread"
 
     @property
     def utilization(self) -> np.ndarray:

@@ -11,6 +11,16 @@ the master purges the round's stragglers.
 straggler delay on ``cancel`` so a purge (or job termination) reclaims them
 *immediately* — the runtime analogue of the simulator's "workers idle until
 the round boundary" semantics.
+
+Wire forms: :class:`RoundBatch` and :class:`TaskResult` are the *local*
+(zero-copy, live-object) forms the thread backend hands around;
+:class:`WireBatch` and :meth:`TaskResult.to_wire` /
+:meth:`TaskResult.from_wire` are their transport-serializable twins — no
+threading primitives, only primitives + contiguous ndarrays — used by any
+backend that crosses a process (or host) boundary.  The cancel event does
+not serialize; remote purging is a transport concern (a purge message
+against the batch's monotonic ``seq``, see
+:mod:`repro.runtime.transport.process`).
 """
 
 from __future__ import annotations
@@ -25,7 +35,11 @@ import numpy as np
 from repro.core import coding, layering, scheduling
 
 __all__ = ["RuntimeConfig", "JobSpec", "RoundContext", "RoundBatch",
-           "TaskResult"]
+           "TaskResult", "WireBatch", "BACKEND_NAMES"]
+
+#: Worker-transport backends the runtime can dispatch over (see
+#: :mod:`repro.runtime.transport`).
+BACKEND_NAMES = ("thread", "process", "jax")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,12 +80,23 @@ class RuntimeConfig:
     adapt: str = "fixed"           # omega policy: adaptive.POLICIES key
     omega_min: float = 1.0         # adaptive omega lower bound
     omega_max: float = 3.0         # adaptive omega upper bound
-    use_jax_devices: bool = False  # place per-worker compute on JAX devices
+    backend: str = "thread"        # worker transport: BACKEND_NAMES key
+    use_jax_devices: bool = False  # legacy alias for backend="jax"
     seed: int = 0
 
     def __post_init__(self):
         if self.straggler not in ("none", "exp", "stall", "shift", "burst"):
             raise ValueError(f"unknown straggler model {self.straggler!r}")
+        if self.backend not in BACKEND_NAMES:
+            raise ValueError(f"unknown worker backend {self.backend!r}; "
+                             f"known: {BACKEND_NAMES}")
+        if self.use_jax_devices and self.backend not in ("thread", "jax"):
+            # the legacy flag only upgrades the default thread selection;
+            # combined with an explicit other backend it would be silently
+            # ignored — reject the contradiction instead
+            raise ValueError(
+                f"use_jax_devices (legacy alias for backend='jax') "
+                f"conflicts with backend={self.backend!r}")
         if self.omega < 1.0:
             raise ValueError(f"redundancy ratio must be >= 1, got {self.omega}")
         if any(not 0 <= w < len(self.mu) for w in self.stall_workers):
@@ -172,14 +197,20 @@ class RoundContext:
 
     ``cancel`` is set when the round fuses (purge) or the job is terminated;
     workers block on it instead of sleeping so reclamation is immediate.
+    The event is a *local* primitive: in-process backends share it with
+    their workers directly, while remote backends keep it master-side (the
+    fusion node still checks it to drop stale results) and propagate the
+    purge over the wire against ``seq`` — the transport-assigned, globally
+    monotonic dispatch sequence number (-1 until submitted).
     """
 
-    __slots__ = ("job_id", "round_idx", "cancel")
+    __slots__ = ("job_id", "round_idx", "cancel", "seq")
 
     def __init__(self, job_id: int, round_idx: int):
         self.job_id = job_id
         self.round_idx = round_idx
         self.cancel = threading.Event()
+        self.seq = -1
 
     @property
     def cancelled(self) -> bool:
@@ -210,6 +241,48 @@ class RoundBatch:
     def count(self) -> int:
         return self.x.shape[0]
 
+    @property
+    def job_id(self) -> int:
+        return self.ctx.job_id
+
+    @property
+    def round_idx(self) -> int:
+        return self.ctx.round_idx
+
+    def to_wire(self) -> "WireBatch":
+        """Serializable twin of this batch (drops the live context).
+
+        Pickling an ndarray view serializes only the viewed slice, so the
+        wire form stays as small as the batch itself.
+        """
+        return WireBatch(seq=self.ctx.seq, job_id=self.ctx.job_id,
+                         round_idx=self.ctx.round_idx,
+                         first_task_id=self.first_task_id,
+                         x=self.x, y=self.y, delays=self.delays)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireBatch:
+    """Transport-serializable form of :class:`RoundBatch`.
+
+    Primitives + ndarrays only — safe over a pipe, socket, or shared
+    memory.  ``seq`` is the transport's monotonic dispatch counter: a purge
+    message names a sequence watermark, and a remote worker drops every
+    batch (queued or in-flight) with ``seq <= watermark``.
+    """
+
+    seq: int
+    job_id: int
+    round_idx: int
+    first_task_id: int
+    x: np.ndarray           # (n, K, M/n1) coded A blocks
+    y: np.ndarray           # (n, K, N/n2) coded B blocks
+    delays: np.ndarray      # (n,) injected straggler delays (seconds)
+
+    @property
+    def count(self) -> int:
+        return self.x.shape[0]
+
 
 @dataclasses.dataclass(frozen=True)
 class TaskResult:
@@ -221,3 +294,16 @@ class TaskResult:
     worker_id: int
     value: np.ndarray       # (M/n1, N/n2)
     finished_at: float      # wall-clock (time.monotonic)
+
+    def to_wire(self) -> tuple:
+        """Flat picklable tuple (the cross-process result envelope)."""
+        return (self.job_id, self.round_idx, self.task_id, self.worker_id,
+                self.value, self.finished_at)
+
+    @staticmethod
+    def from_wire(wire: tuple) -> "TaskResult":
+        """Rebuild a result on the master side of a transport."""
+        job_id, round_idx, task_id, worker_id, value, finished_at = wire
+        return TaskResult(job_id=job_id, round_idx=round_idx,
+                          task_id=task_id, worker_id=worker_id,
+                          value=value, finished_at=finished_at)

@@ -1,0 +1,118 @@
+"""Pluggable worker transports for the runtime engine.
+
+One dispatch interface — :class:`~repro.runtime.transport.base.WorkerTransport`
+(start / sample delays / submit round / purge / shutdown, push-style
+result return into the fusion sink) — and three backends behind it:
+
+``thread``
+    Today's in-process worker pool (:mod:`repro.runtime.worker`), now the
+    reference adapter: zero-copy round views, shared cancel events.
+``process``
+    Multiprocessing workers over pipes
+    (:mod:`repro.runtime.transport.process`): GIL-free parallel compute,
+    wire-serialized batches, purge watermarks, a master-side drain thread.
+``jax``
+    One worker per local JAX device
+    (:mod:`repro.runtime.transport.jax_device`): thread loop, device-pinned
+    async-dispatch compute.
+
+The master never names a backend class — it calls :func:`make_transport`
+with the run's :class:`~repro.runtime.tasks.RuntimeConfig`, whose
+``backend`` field picks the substrate.  Every backend must pass the same
+conformance suite (``tests/test_transport_conformance.py``): identical
+round-trip decode, purge, shutdown, and simulator-agreement behavior.
+
+Backend modules load lazily (PEP 562): the base contract lives below the
+worker module in the import graph (it hosts the shared master-side
+dispatch template), while the concrete backends live above it, so eager
+package-level imports of both would be circular.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Optional, Type
+
+import numpy as np
+
+from repro.runtime.tasks import RuntimeConfig, TaskResult
+from repro.runtime.transport.base import StragglerModel, WorkerTransport
+
+__all__ = ["WorkerTransport", "StragglerModel", "ThreadTransport",
+           "ProcessTransport", "JaxDeviceTransport", "BACKENDS",
+           "make_transport"]
+
+#: backend name -> (module, class) — the ``RuntimeConfig.backend`` registry.
+_BACKEND_PATHS: dict[str, tuple[str, str]] = {
+    "thread": ("repro.runtime.transport.thread", "ThreadTransport"),
+    "process": ("repro.runtime.transport.process", "ProcessTransport"),
+    "jax": ("repro.runtime.transport.jax_device", "JaxDeviceTransport"),
+}
+
+
+def _load(backend: str) -> Type[WorkerTransport]:
+    module, cls_name = _BACKEND_PATHS[backend]
+    return getattr(importlib.import_module(module), cls_name)
+
+
+class _BackendRegistry(dict):
+    """Name -> transport class, materializing backend modules on access."""
+
+    def __missing__(self, name: str) -> Type[WorkerTransport]:
+        if name not in _BACKEND_PATHS:
+            raise KeyError(name)
+        cls = _load(name)
+        self[name] = cls
+        return cls
+
+    def __iter__(self):
+        return iter(_BACKEND_PATHS)
+
+    def __len__(self):
+        return len(_BACKEND_PATHS)
+
+    def keys(self):
+        return _BACKEND_PATHS.keys()
+
+    def items(self):
+        return [(name, self[name]) for name in _BACKEND_PATHS]
+
+    def values(self):
+        return [self[name] for name in _BACKEND_PATHS]
+
+
+BACKENDS: dict[str, Type[WorkerTransport]] = _BackendRegistry()
+
+_LAZY_CLASSES = {"ThreadTransport": "thread", "ProcessTransport": "process",
+                 "JaxDeviceTransport": "jax"}
+
+
+def __getattr__(name: str):
+    backend = _LAZY_CLASSES.get(name)
+    if backend is not None:
+        return _load(backend)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def make_transport(cfg: RuntimeConfig,
+                   sink: Callable[[TaskResult], None],
+                   rng: Optional[np.random.Generator] = None
+                   ) -> WorkerTransport:
+    """Build the configured worker transport (not yet started).
+
+    ``cfg.backend`` picks the class; the legacy ``use_jax_devices`` flag
+    upgrades a default ``thread`` selection to the ``jax`` backend, which
+    preserves its pre-transport behavior exactly (thread workers, compute
+    placed round-robin over local devices).  Conflicting combinations
+    (``use_jax_devices`` with an explicitly non-thread backend) are
+    rejected at config construction, not here.
+    """
+    backend = cfg.backend
+    if backend == "thread" and cfg.use_jax_devices:
+        backend = "jax"
+    try:
+        cls = BACKENDS[backend]
+    except KeyError:
+        raise ValueError(f"unknown worker backend {backend!r}; "
+                         f"known: {sorted(_BACKEND_PATHS)}") from None
+    return cls(cfg, sink=sink, rng=rng)

@@ -1,0 +1,230 @@
+"""The worker-transport contract every runtime backend implements.
+
+:class:`WorkerTransport` is the seam between the master's §IV round loop
+and the execution substrate.  The master speaks only this interface; the
+thread, process, and jax-device backends (and any future remote/RPC one)
+implement it.  The contract, precisely:
+
+* ``start()`` brings up ``cfg.num_workers`` workers (threads, processes,
+  or device-bound executors).  Worker ``p`` corresponds to service rate
+  ``cfg.mu[p]`` — the eq. (1) split indexes workers by position.
+* ``sample_round_delays(kappa)`` draws one round's injected straggler
+  delays **master-side** (deterministic per seed, identical across
+  backends) so every transport faces the same straggler trace.
+* ``submit_round(ctx, X, Y, kappa, delays)`` dispatches one round: worker
+  ``p`` receives the contiguous ``kappa_p``-slice of the ``(T, ...)``
+  coded buffers.  The transport stamps ``ctx.seq`` with a monotonic
+  dispatch sequence number; backends that cross a process boundary ship
+  the slice as a :class:`~repro.runtime.tasks.WireBatch` keyed by it.
+* Results return **push-style**: each completed task is delivered to the
+  ``sink`` callable (the fusion node's ``post``) as a
+  :class:`~repro.runtime.tasks.TaskResult`.  In-process backends call the
+  sink from their worker threads; remote backends pump it from a drain
+  thread that polls the transport's result channel.  The sink must
+  therefore be thread-safe (the fusion node is), and ``finished_at``
+  timestamps must be mutually comparable with the master's clock
+  (``time.monotonic`` — system-wide on Linux, the platform the process
+  backend targets).
+* ``purge_round(ctx)`` reclaims the round's stragglers *immediately*:
+  workers delaying on one of its tasks abort the wait, queued slices are
+  dropped and counted.  Purge-then-result races are legal — the fusion
+  node drops and counts stale results — but a purged round must never
+  occupy a worker longer than one in-flight task.
+* ``shutdown(timeout, drain=...)`` is deterministic drain-or-purge:
+  ``drain=False`` (the master's default — every submitted round is
+  already fused or terminated) purges outstanding work; ``drain=True``
+  completes it.  Either way, *no worker thread or process may outlive the
+  call* — implementations raise rather than leak.
+* ``busy_seconds`` / ``tasks_done`` / ``tasks_purged`` expose per-worker
+  occupancy (delay + compute, purged waits included) and task outcomes
+  with identical semantics everywhere; ``busy_seconds`` feeds the
+  ω-controller's utilization signal each round, so it may lag by at most
+  the transport's result-return latency.
+
+The adaptive controller's :class:`~repro.runtime.adaptive.RoundObservation`
+carries only scalars and small arrays (wait, stale count, margin,
+utilization) measured master-side, so the retune loop is transport-
+agnostic by construction — the ROADMAP's multi-host claim, enforced by
+the backend-conformance suite (``tests/test_transport_conformance.py``).
+"""
+
+from __future__ import annotations
+
+import abc
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.runtime.tasks import RoundContext, RuntimeConfig, TaskResult
+
+__all__ = ["StragglerModel", "WorkerTransport"]
+
+clock = time.monotonic
+
+
+class StragglerModel:
+    """Samples per-task injected delays for each worker (master-side RNG).
+
+    Delays are in seconds.  The time-varying modes (``shift``/``burst``)
+    measure elapsed time from the model's first sample; the master
+    presamples each round's delays one round ahead, so a regime boundary
+    lands within ~one round of its nominal wall-clock instant.
+
+    Sampling is a *transport-level* concern but always runs master-side,
+    whatever the backend: the delays travel to the workers inside the
+    (wire) batch, so a thread run and a process run with the same seed
+    face the same injected trace.  (Historically lived in
+    :mod:`repro.runtime.worker`, which still re-exports it.)
+    """
+
+    def __init__(self, cfg: RuntimeConfig, rng: np.random.Generator):
+        self._cfg = cfg
+        self._rng = rng
+        self._origin: float | None = None
+
+    def _elapsed(self) -> float:
+        """Seconds since the first sample (the regime clock)."""
+        now = clock()
+        if self._origin is None:
+            self._origin = now
+        return now - self._origin
+
+    def _stalled(self, worker_id: int) -> bool:
+        """Is this worker dark *right now* under the configured regime?"""
+        cfg = self._cfg
+        if worker_id not in cfg.stall_workers:
+            return False
+        if cfg.straggler == "stall":
+            return True
+        if cfg.straggler == "shift":
+            return self._elapsed() >= cfg.shift_at
+        if cfg.straggler == "burst":
+            return (self._elapsed() % cfg.burst_period) < cfg.burst_len
+        return False
+
+    def sample(self, worker_id: int, num_tasks: int) -> np.ndarray:
+        """(num_tasks,) delays in seconds for one worker's round queue."""
+        cfg = self._cfg
+        if self._origin is None:
+            # anchor the regime clock on the run's FIRST sample, whoever
+            # it is for: a stall-listed worker can legitimately hold
+            # kappa = 0 (eq. 1), and anchoring lazily inside its own
+            # branch would silently delay or disable the regime change
+            self._origin = clock()
+        if num_tasks == 0 or cfg.straggler == "none":
+            return np.zeros(num_tasks)
+        if self._stalled(worker_id):
+            return np.full(num_tasks, cfg.stall_seconds)
+        scale = cfg.minijob_complexity / cfg.mu[worker_id]
+        return self._rng.exponential(scale=scale, size=num_tasks)
+
+
+class WorkerTransport(abc.ABC):
+    """Abstract worker substrate: start / submit / purge / shutdown.
+
+    Subclasses set :attr:`name` (the ``RuntimeConfig.backend`` key) and
+    implement the abstract surface below; see the module docstring for
+    the exact semantics each method must honour.
+
+    The master-side half of dispatch is *shared*: delay sampling
+    (:meth:`sample_round_delays`) and the seq-stamp + eq. (1) kappa-slice
+    loop (:meth:`submit_round`) are implemented here once, so the
+    "identical straggler trace and task split across backends" invariant
+    cannot drift; backends only provide :meth:`_send_slice` — how one
+    worker's contiguous slice actually reaches that worker.
+    """
+
+    #: Registry key (``RuntimeConfig.backend`` value) for this backend.
+    name: str = "abstract"
+
+    def __init__(self, cfg: RuntimeConfig,
+                 sink: Callable[[TaskResult], None],
+                 rng: Optional[np.random.Generator] = None):
+        self._cfg = cfg
+        self._sink = sink
+        self.straggler = StragglerModel(
+            cfg, rng if rng is not None else np.random.default_rng(cfg.seed))
+        self._seq = 0
+
+    def sample_round_delays(self, kappa: np.ndarray) -> list[np.ndarray]:
+        """Master-side per-worker injected-delay vectors for one round.
+
+        Split out of :meth:`submit_round` so the master can presample the
+        next round's delays off the critical path (in its encode-ahead
+        slot) and dispatch with buffers alone.
+        """
+        return [self.straggler.sample(p, int(kappa[p]))
+                for p in range(self._cfg.num_workers)]
+
+    def submit_round(self, ctx: RoundContext, X: np.ndarray, Y: np.ndarray,
+                     kappa: np.ndarray,
+                     delays: Optional[list] = None) -> None:
+        """Dispatch one round's T coded tasks per the eq. (1) split:
+        worker p gets the contiguous ``kappa_p``-slice ``[lo, hi)`` of
+        the coded buffers; the round is stamped with a monotonic dispatch
+        ``seq`` first (the purge-watermark key for remote backends)."""
+        if delays is None:
+            delays = self.sample_round_delays(kappa)
+        ctx.seq = self._seq
+        self._seq += 1
+        lo = 0
+        for p in range(self._cfg.num_workers):
+            hi = lo + int(kappa[p])
+            if lo == hi:
+                continue
+            self._send_slice(p, ctx, lo, X[lo:hi], Y[lo:hi], delays[p])
+            lo = hi
+
+    @abc.abstractmethod
+    def _send_slice(self, worker_id: int, ctx: RoundContext, first_task: int,
+                    x: np.ndarray, y: np.ndarray,
+                    delays: np.ndarray) -> None:
+        """Deliver one worker's round slice (backend-specific hop)."""
+
+    @abc.abstractmethod
+    def start(self) -> None:
+        """Bring up the workers; must be called before any submit."""
+
+    def _dead_workers(self) -> list[str]:
+        """Names of workers that died *unexpectedly* (not stopping)."""
+        return []
+
+    def assert_alive(self) -> None:
+        """Raise if any worker died outside an orderly shutdown.
+
+        The master calls this between unbounded fusion waits: a worker
+        process OOM-killed (or a worker thread killed by an unexpected
+        exception) while holding more than ``T - k`` of a round's tasks
+        would otherwise leave the round unable to fuse and the run
+        blocked forever.  Turning that into a prompt error is the
+        contract; backends report deaths via :meth:`_dead_workers`.
+        """
+        dead = self._dead_workers()
+        if dead:
+            raise RuntimeError(
+                f"{self.name} transport: worker(s) died mid-run: {dead}")
+
+    @abc.abstractmethod
+    def purge_round(self, ctx: RoundContext) -> None:
+        """Reclaim the round's stragglers immediately (idempotent)."""
+
+    @abc.abstractmethod
+    def shutdown(self, timeout: float = 10.0, *, drain: bool = False
+                 ) -> None:
+        """Deterministic drain-or-purge stop; raises on leaked workers."""
+
+    @property
+    @abc.abstractmethod
+    def busy_seconds(self) -> np.ndarray:
+        """(num_workers,) seconds each worker spent occupied so far."""
+
+    @property
+    @abc.abstractmethod
+    def tasks_done(self) -> int:
+        """Completed (result-emitting) tasks across all workers."""
+
+    @property
+    @abc.abstractmethod
+    def tasks_purged(self) -> int:
+        """Tasks abandoned by purges or purge-mode shutdown."""

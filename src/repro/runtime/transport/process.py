@@ -1,0 +1,334 @@
+"""The ``process`` backend: multiprocessing workers over pipes.
+
+True GIL-free parallel compute and *real* stragglers: each worker is an
+OS process with a private duplex pipe for control/batches and a shared
+result queue back to the master, where a drain thread pumps completed
+tasks into the fusion sink.  The §IV semantics are preserved exactly:
+
+* **Dispatch** — the master serializes each worker's ``kappa_p``-slice as
+  a :class:`~repro.runtime.tasks.WireBatch` (primitives + ndarrays; a
+  view pickles as just its slice) and sends it down the worker's pipe.
+* **Purge** — a ``("purge", seq)`` message carrying the round's monotonic
+  dispatch sequence number.  Workers treat it as a watermark: every batch
+  with ``seq <= watermark`` — queued *or* currently delaying — is dropped
+  and counted.  An in-flight delay wait polls the pipe
+  (``Connection.poll`` with the remaining-delay timeout), so a purge
+  wakes a delayed worker immediately, matching the thread backend's
+  shared cancel event.
+* **Results** — workers push ``("result", wire, busy_seconds)`` envelopes
+  onto one shared queue; the master-side drain thread rebuilds
+  :class:`~repro.runtime.tasks.TaskResult` and posts it to the fusion
+  sink.  The piggybacked cumulative ``busy_seconds`` keeps the
+  ω-controller's utilization signal fresh without a stats RPC.
+* **Shutdown** — ``("stop", drain)`` then join: workers finish (drain) or
+  purge their queues, emit a final ``("stats", ...)`` envelope (so
+  ``tasks_purged``/``busy_seconds`` are exact even for tasks that never
+  produced results), and exit.  Stragglers are terminated and reported —
+  the transport never leaks a process.
+
+Timestamps: workers stamp ``finished_at`` with ``time.monotonic``, which
+is CLOCK_MONOTONIC — system-wide, comparable across processes on Linux
+(the platform this backend targets; the CI smoke job pins it).
+
+Start method: ``fork`` where available (cheap, and child workers inherit
+the already-imported numpy/BLAS state instead of paying a multi-second
+re-import that would pollute the first measured rounds), else ``spawn``;
+the worker entrypoint and all its arguments are picklable either way.
+Forking a process whose parent has live JAX threads draws CPython's
+fork-safety warning; the children here touch only numpy and pipe I/O
+(never JAX), which is why the master still watches liveness
+(:meth:`ProcessTransport._dead_workers` via
+:meth:`~repro.runtime.transport.base.WorkerTransport.assert_alive`) so a
+child lost for *any* reason fails the run promptly instead of hanging an
+unbounded fusion wait.  Pass ``start_method="spawn"`` to opt out of fork
+entirely.
+"""
+
+from __future__ import annotations
+
+import collections
+import multiprocessing
+import queue as _queue
+import threading
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.runtime.tasks import (RoundContext, RuntimeConfig, TaskResult,
+                                 WireBatch)
+from repro.runtime.transport.base import WorkerTransport
+from repro.runtime.worker import (BatchRunner, WAIT_SLICE, clock,
+                                  make_compute)
+
+__all__ = ["ProcessTransport"]
+
+
+class _PipeGuard:
+    """Worker-side cancellation guard backed by the control pipe.
+
+    ``cancelled`` is true once the batch's ``seq`` falls under the purge
+    watermark (or a purge-mode stop arrived); ``wait`` blocks on the pipe
+    so a purge message interrupts an injected delay the moment it lands.
+    """
+
+    __slots__ = ("_loop", "_seq")
+
+    def __init__(self, loop: "_WorkerLoop", seq: int):
+        self._loop = loop
+        self._seq = seq
+
+    def cancelled(self) -> bool:
+        self._loop.pump(block=False)
+        return self._seq <= self._loop.watermark or self._loop.purging
+
+    def wait(self, delay: float) -> bool:
+        loop = self._loop
+        end = clock() + delay
+        while True:
+            remaining = end - clock()
+            if remaining <= 0.0:
+                return False
+            # block on the pipe, not time.sleep: a purge (or stop) message
+            # wakes this worker immediately, like the thread backend's
+            # cancel event.  WAIT_SLICE only caps the window so a dead
+            # master can't strand a multi-second stall forever.
+            if loop.conn.poll(timeout=min(remaining, WAIT_SLICE)):
+                loop.pump(block=False)
+            if self._seq <= loop.watermark or loop.purging:
+                return True
+
+
+class _WorkerLoop:
+    """One worker process's event loop (runs inside the child)."""
+
+    def __init__(self, worker_id: int, cfg: RuntimeConfig, conn, results):
+        self.conn = conn
+        self._results = results
+        self.watermark = -1          # highest purged dispatch seq
+        self.stopping = False
+        self._drain_on_stop = True
+        self.queue: collections.deque[WireBatch] = collections.deque()
+        self.runner = BatchRunner(worker_id, make_compute(cfg, worker_id),
+                                  self._emit)
+
+    @property
+    def purging(self) -> bool:
+        return self.stopping and not self._drain_on_stop
+
+    def _emit(self, result: TaskResult) -> None:
+        self._results.put(("result", result.to_wire(),
+                           self.runner.busy_seconds))
+
+    def _handle(self, msg: tuple) -> None:
+        kind = msg[0]
+        if kind == "round":
+            self.queue.append(msg[1])
+        elif kind == "purge":
+            self.watermark = max(self.watermark, msg[1])
+        elif kind == "stop":
+            self.stopping = True
+            self._drain_on_stop = msg[1]
+        else:  # pragma: no cover - protocol violation
+            raise RuntimeError(f"unknown control message {kind!r}")
+
+    def pump(self, *, block: bool) -> None:
+        """Ingest every pending control message.
+
+        With ``block=True``, additionally park on the pipe until there is
+        *something* to do (a batch arrives, or stop) — the worker's idle
+        state.  Purge watermarks are ingested either way, so a queued dead
+        round is dropped before a single task of it runs.
+        """
+        while True:
+            if self.conn.poll():
+                self._handle(self.conn.recv())
+                continue
+            if block and not self.queue and not self.stopping:
+                self._handle(self.conn.recv())   # idle: park on the pipe
+                continue
+            return
+
+    def run(self) -> None:
+        while True:
+            self.pump(block=True)
+            if self.queue:
+                batch = self.queue.popleft()
+                if batch.seq <= self.watermark or self.purging:
+                    self.runner.tasks_purged += batch.count
+                    continue
+                self.runner.run(batch, _PipeGuard(self, batch.seq))
+            elif self.stopping:
+                break
+        self._results.put(("stats", self.runner.worker_id,
+                           self.runner.busy_seconds, self.runner.tasks_done,
+                           self.runner.tasks_purged))
+
+
+def _worker_main(worker_id: int, cfg: RuntimeConfig, conn, results) -> None:
+    """Child-process entrypoint (module-level: picklable under spawn)."""
+    try:
+        _WorkerLoop(worker_id, cfg, conn, results).run()
+    except (EOFError, BrokenPipeError, KeyboardInterrupt):
+        pass                      # master died or interrupted: exit quietly
+    finally:
+        conn.close()
+
+
+class ProcessTransport(WorkerTransport):
+    """``cfg.num_workers`` OS-process workers, pipes + result queue."""
+
+    name = "process"
+
+    def __init__(self, cfg: RuntimeConfig,
+                 sink: Callable[[TaskResult], None],
+                 rng: Optional[np.random.Generator] = None, *,
+                 start_method: Optional[str] = None):
+        super().__init__(cfg, sink, rng)
+        if start_method is None:
+            methods = multiprocessing.get_all_start_methods()
+            start_method = "fork" if "fork" in methods else "spawn"
+        self._mp = multiprocessing.get_context(start_method)
+        # mp.Queue, not SimpleQueue: the drain loop needs get(timeout) so
+        # it can notice the stop flag without a sentinel message — a
+        # sentinel put() could block forever on the queue's write lock if
+        # a leaked worker was terminated mid-put.  Workers' feeder threads
+        # are flushed on orderly process exit, so final stats envelopes
+        # are never lost.
+        self._results = self._mp.Queue()
+        self._conns = []
+        self.processes = []
+        for p in range(cfg.num_workers):
+            parent, child = self._mp.Pipe()
+            proc = self._mp.Process(
+                target=_worker_main, args=(p, cfg, child, self._results),
+                name=f"runtime-proc-worker-{p}", daemon=True)
+            self._conns.append((parent, child))
+            self.processes.append(proc)
+        self._busy = np.zeros(cfg.num_workers)
+        self._done = 0
+        self._purged = 0
+        self._stats_lock = threading.Lock()
+        self._drainer = threading.Thread(target=self._drain, daemon=True,
+                                         name="runtime-process-drain")
+        self._started = False
+        self._shutting_down = False
+        self._stop_drain = threading.Event()
+
+    # -- master side ---------------------------------------------------------
+    def start(self) -> None:
+        for proc in self.processes:
+            proc.start()
+        for _, child in self._conns:
+            child.close()        # parent keeps only its end of each pipe
+        self._drainer.start()
+        self._started = True
+
+    def _send_slice(self, worker_id: int, ctx: RoundContext, first_task: int,
+                    x: np.ndarray, y: np.ndarray,
+                    delays: np.ndarray) -> None:
+        """One ``("round", WireBatch)`` message down the worker's pipe."""
+        wire = WireBatch(seq=ctx.seq, job_id=ctx.job_id,
+                         round_idx=ctx.round_idx, first_task_id=first_task,
+                         x=x, y=y, delays=delays)
+        self._conns[worker_id][0].send(("round", wire))
+
+    def _dead_workers(self) -> list[str]:
+        if not self._started or self._shutting_down:
+            return []
+        return [p.name for p in self.processes if not p.is_alive()]
+
+    def purge_round(self, ctx: RoundContext) -> None:
+        ctx.purge()              # master side: fusion drops stale results
+        if ctx.seq < 0:
+            return               # never dispatched
+        for conn, _ in self._conns:
+            try:
+                conn.send(("purge", ctx.seq))
+            except (BrokenPipeError, OSError):  # worker already gone
+                pass
+
+    def shutdown(self, timeout: float = 10.0, *, drain: bool = False
+                 ) -> None:
+        self._shutting_down = True
+        if not self._started:
+            for proc in self.processes:
+                if proc.is_alive():  # pragma: no cover - defensive
+                    proc.terminate()
+            return
+        for conn, _ in self._conns:
+            try:
+                conn.send(("stop", drain))
+            except (BrokenPipeError, OSError):
+                pass
+        leaked = []
+        for proc in self.processes:
+            proc.join(timeout=timeout)
+            if proc.is_alive():
+                leaked.append(proc.name)
+                proc.terminate()
+                proc.join(timeout=1.0)
+        # orderly workers flushed results + final stats before exiting
+        # (their queue feeder threads are joined at process exit); the
+        # drain loop empties what is there and exits on the stop flag —
+        # no sentinel message, so a worker terminated mid-put cannot
+        # deadlock the shutdown path
+        self._stop_drain.set()
+        self._drainer.join(timeout=timeout)
+        for conn, _ in self._conns:
+            conn.close()
+        self._results.close()
+        if leaked:
+            raise RuntimeError(
+                f"worker processes failed to stop within {timeout}s "
+                f"(terminated): {leaked}")
+
+    # -- result drain (master-side thread) -----------------------------------
+    def _drain(self) -> None:
+        while True:
+            try:
+                msg = self._results.get(timeout=0.25)
+            except _queue.Empty:
+                if self._stop_drain.is_set():
+                    return
+                continue
+            except (EOFError, OSError):  # pragma: no cover - queue torn down
+                return
+            except Exception:            # pragma: no cover - corrupt pickle
+                # a worker terminated mid-write can leave a truncated
+                # pickle; drop it and keep draining the healthy tail
+                if self._stop_drain.is_set():
+                    return
+                continue
+            if msg[0] == "result":
+                _, wire, busy = msg
+                result = TaskResult.from_wire(wire)
+                with self._stats_lock:
+                    self._busy[result.worker_id] = busy
+                self._sink(result)
+            elif msg[0] == "stats":
+                _, worker_id, busy, done, purged = msg
+                with self._stats_lock:
+                    self._busy[worker_id] = busy
+                    self._done += done
+                    self._purged += purged
+
+    # -- occupancy / outcome counters ----------------------------------------
+    @property
+    def busy_seconds(self) -> np.ndarray:
+        """Per-worker occupancy; live values ride each result envelope
+        (so this lags a worker's *current* delay wait by one task), and
+        the final stats envelopes make it exact after shutdown."""
+        with self._stats_lock:
+            return self._busy.copy()
+
+    @property
+    def tasks_done(self) -> int:
+        """Exact after shutdown (final stats); 0 while running."""
+        with self._stats_lock:
+            return self._done
+
+    @property
+    def tasks_purged(self) -> int:
+        """Exact after shutdown (final stats); 0 while running."""
+        with self._stats_lock:
+            return self._purged

@@ -1,10 +1,28 @@
-"""Concurrent worker pool executing real coded matmul tasks.
+"""Worker-side execution: compute kernels, batch runner, thread workers.
 
-Each worker is a thread with its own FIFO task queue (the master assigns
-``kappa_p`` coded tasks per round, eq. (1)).  A task is a genuine matrix
-product ``x.T @ y`` of polynomial-coded blocks; heterogeneity and
-stragglers are injected as a pre-task delay sampled by the master from the
-pluggable straggler model:
+This module is split along the transport seam (see
+:mod:`repro.runtime.transport`):
+
+* **Compute kernels** (:func:`make_compute`) — the actual coded-task math,
+  ``x.T @ y`` on host BLAS (releases the GIL) or on a JAX device.  Pure
+  functions of the operands; no knowledge of queues or processes.
+* **:class:`BatchRunner`** — the backend-agnostic per-batch engine: walk a
+  round slice task by task, wait out each task's injected straggler delay
+  against a cancellation guard, compute, and emit a
+  :class:`~repro.runtime.tasks.TaskResult`.  Every backend (thread,
+  process, jax-device) runs its tasks through this one class, so purge
+  semantics and occupancy accounting cannot drift between transports.
+* **:class:`Worker` / :class:`WorkerPool`** — the in-process *thread*
+  transport loop: one thread per worker with a FIFO queue, shared-memory
+  :class:`~repro.runtime.tasks.RoundContext` cancellation, and
+  deterministic drain-or-purge shutdown.  :class:`WorkerPool` implements
+  the :class:`~repro.runtime.transport.base.WorkerTransport` contract and
+  is re-exported as the ``thread`` backend.
+
+Each worker executes the ``kappa_p`` coded tasks the master assigned for
+the round (eq. (1)).  A task is a genuine matrix product ``x.T @ y`` of
+polynomial-coded blocks; heterogeneity and stragglers are injected as a
+pre-task delay sampled master-side from the pluggable straggler model:
 
 * ``"none"``  — no injected delay; tasks run as fast as the host allows.
 * ``"exp"``   — delay ~ Exp(scale = complexity / mu_p), the §IV service
@@ -24,13 +42,10 @@ The time-varying modes are wall-clock based (seconds since the model's
 first sample), so every variant of a sweep — static or adaptive omega —
 faces the same regime timeline against the same arrival trace.
 
-Workers wait out the injected delay on the round's ``cancel`` event, so a
-purge (round fused elsewhere, or job terminated) reclaims a delayed worker
-immediately — matching the simulator's master-paced round boundaries.
-
-Optionally (``use_jax_devices``) each worker places its products on a JAX
-device (round-robin over ``jax.devices()``); the default compute path is
-host BLAS, which releases the GIL so the pool genuinely overlaps.
+Workers wait out the injected delay on the round's cancellation guard, so
+a purge (round fused elsewhere, or job terminated) reclaims a delayed
+worker immediately — matching the simulator's master-paced round
+boundaries.
 """
 
 from __future__ import annotations
@@ -38,67 +53,28 @@ from __future__ import annotations
 import collections
 import threading
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Protocol
 
 import numpy as np
 
-from repro.runtime.tasks import RoundBatch, RuntimeConfig, TaskResult
+from repro.runtime.tasks import (RoundBatch, RoundContext, RuntimeConfig,
+                                 TaskResult, WireBatch)
+from repro.runtime.transport.base import StragglerModel, WorkerTransport
 
-__all__ = ["StragglerModel", "Worker", "WorkerPool", "clock"]
+__all__ = ["StragglerModel", "Worker", "WorkerPool", "BatchRunner",
+           "CancelGuard", "make_compute", "clock"]
 
 clock = time.monotonic
 
+#: Poll granularity (seconds) for long cancellable waits.  Delays shorter
+#: than one slice — the typical exp draw — are a single plain wait, so the
+#: injected-delay precision the simulator-agreement tests rely on is
+#: untouched; only multi-second stalls are sliced, where the slack lets a
+#: stopping worker notice a pool-wide purge that bypassed its round guard.
+WAIT_SLICE = 0.1
 
-class StragglerModel:
-    """Samples per-task injected delays for each worker (master-side RNG).
 
-    Delays are in seconds.  The time-varying modes (``shift``/``burst``)
-    measure elapsed time from the model's first sample; the master
-    presamples each round's delays one round ahead, so a regime boundary
-    lands within ~one round of its nominal wall-clock instant.
-    """
-
-    def __init__(self, cfg: RuntimeConfig, rng: np.random.Generator):
-        self._cfg = cfg
-        self._rng = rng
-        self._origin: float | None = None
-
-    def _elapsed(self) -> float:
-        """Seconds since the first sample (the regime clock)."""
-        now = clock()
-        if self._origin is None:
-            self._origin = now
-        return now - self._origin
-
-    def _stalled(self, worker_id: int) -> bool:
-        """Is this worker dark *right now* under the configured regime?"""
-        cfg = self._cfg
-        if worker_id not in cfg.stall_workers:
-            return False
-        if cfg.straggler == "stall":
-            return True
-        if cfg.straggler == "shift":
-            return self._elapsed() >= cfg.shift_at
-        if cfg.straggler == "burst":
-            return (self._elapsed() % cfg.burst_period) < cfg.burst_len
-        return False
-
-    def sample(self, worker_id: int, num_tasks: int) -> np.ndarray:
-        """(num_tasks,) delays in seconds for one worker's round queue."""
-        cfg = self._cfg
-        if self._origin is None:
-            # anchor the regime clock on the run's FIRST sample, whoever
-            # it is for: a stall-listed worker can legitimately hold
-            # kappa = 0 (eq. 1), and anchoring lazily inside its own
-            # branch would silently delay or disable the regime change
-            self._origin = clock()
-        if num_tasks == 0 or cfg.straggler == "none":
-            return np.zeros(num_tasks)
-        if self._stalled(worker_id):
-            return np.full(num_tasks, cfg.stall_seconds)
-        scale = cfg.minijob_complexity / cfg.mu[worker_id]
-        return self._rng.exponential(scale=scale, size=num_tasks)
-
+# -- compute kernels ----------------------------------------------------------
 
 def _host_compute(x: np.ndarray, y: np.ndarray) -> np.ndarray:
     return x.T @ y
@@ -111,11 +87,127 @@ def _jax_compute(device) -> Callable[[np.ndarray, np.ndarray], np.ndarray]:
     fn = jax.jit(lambda x, y: jnp.matmul(x.T, y))
 
     def compute(x: np.ndarray, y: np.ndarray) -> np.ndarray:
-        return np.asarray(fn(jax.device_put(x, device),
-                             jax.device_put(y, device)))
+        # dispatch is asynchronous (jit returns immediately); the
+        # np.asarray materialization is the only synchronization point,
+        # right before the result is emitted to the fusion node.
+        out = fn(jax.device_put(x, device), jax.device_put(y, device))
+        return np.asarray(out)
 
     return compute
 
+
+def make_compute(cfg: RuntimeConfig, worker_id: int, *, device=None
+                 ) -> Callable[[np.ndarray, np.ndarray], np.ndarray]:
+    """The coded-task kernel for one worker: host BLAS or a JAX device.
+
+    ``device`` pins the worker to a specific JAX device (the ``jax``
+    backend passes ``jax.devices()[worker_id % len(devices)]``); with
+    ``device=None`` the worker computes on host BLAS, which releases the
+    GIL so a thread pool genuinely overlaps.
+    """
+    del worker_id  # reserved for per-worker kernel variants
+    if device is not None:
+        return _jax_compute(device)
+    return _host_compute
+
+
+# -- the backend-agnostic batch engine ---------------------------------------
+
+class CancelGuard(Protocol):
+    """The cancellation primitive a transport hands the batch runner.
+
+    ``cancelled()`` is the instantaneous probe (checked before every
+    task); ``wait(delay)`` blocks for up to ``delay`` seconds and returns
+    True the moment the batch is cancelled (purge, termination, or a
+    purge-mode shutdown) — the hook that makes straggler reclamation
+    immediate on every backend.
+    """
+
+    def cancelled(self) -> bool: ...
+
+    def wait(self, delay: float) -> bool: ...
+
+
+class BatchRunner:
+    """Executes round slices for one worker, whatever the transport.
+
+    Owns the worker's occupancy/outcome counters (``busy_seconds`` =
+    injected delay + compute, including purged waits; ``tasks_done``;
+    ``tasks_purged``) so the accounting is identical across backends.
+    ``emit`` delivers each completed :class:`TaskResult` — directly into
+    the fusion node for in-process backends, onto the result queue for
+    remote ones.
+    """
+
+    def __init__(self, worker_id: int,
+                 compute: Callable[[np.ndarray, np.ndarray], np.ndarray],
+                 emit: Callable[[TaskResult], None]):
+        self.worker_id = worker_id
+        self._compute = compute
+        self._emit = emit
+        self.busy_seconds = 0.0
+        self.tasks_done = 0
+        self.tasks_purged = 0
+
+    def run(self, batch: RoundBatch | WireBatch, guard: CancelGuard) -> None:
+        """Run one round slice to completion or cancellation."""
+        for i in range(batch.count):
+            if guard.cancelled():
+                self.tasks_purged += batch.count - i
+                return
+            t0 = clock()
+            delay = float(batch.delays[i])
+            if delay > 0.0 and guard.wait(delay):
+                # reclaimed mid-delay: the wait so far was real occupancy
+                self.busy_seconds += clock() - t0
+                self.tasks_purged += batch.count - i
+                return
+            if guard.cancelled():
+                self.busy_seconds += clock() - t0
+                self.tasks_purged += batch.count - i
+                return
+            value = self._compute(batch.x[i], batch.y[i])
+            now = clock()
+            self.busy_seconds += now - t0
+            self.tasks_done += 1
+            self._emit(TaskResult(job_id=batch.job_id,
+                                  round_idx=batch.round_idx,
+                                  task_id=batch.first_task_id + i,
+                                  worker_id=self.worker_id,
+                                  value=value, finished_at=now))
+
+
+class _EventGuard:
+    """Thread-backend guard: the round's shared cancel event + pool stop.
+
+    A purge wakes the wait instantly through the event; a purge-mode
+    worker stop is noticed at worst one :data:`WAIT_SLICE` later (only
+    relevant for multi-second stall delays — shorter delays are a single
+    un-sliced wait).
+    """
+
+    __slots__ = ("_ctx", "_worker")
+
+    def __init__(self, ctx, worker: "Worker"):
+        self._ctx = ctx
+        self._worker = worker
+
+    def cancelled(self) -> bool:
+        return self._ctx.cancelled or self._worker.purging
+
+    def wait(self, delay: float) -> bool:
+        end = clock() + delay
+        while True:
+            remaining = end - clock()
+            if remaining <= 0.0:
+                return False
+            if self._ctx.cancel.wait(timeout=min(remaining, WAIT_SLICE)):
+                return True
+            if self._worker.purging:
+                return True
+
+
+# -- the thread transport loop ------------------------------------------------
 
 class Worker(threading.Thread):
     """One worker thread: FIFO queue, cancellation-aware delay, compute."""
@@ -125,14 +217,28 @@ class Worker(threading.Thread):
                  compute: Callable[[np.ndarray, np.ndarray], np.ndarray]):
         super().__init__(name=f"runtime-worker-{worker_id}", daemon=True)
         self.worker_id = worker_id
-        self._sink = sink
-        self._compute = compute
+        self.runner = BatchRunner(worker_id, compute, sink)
         self._queue: collections.deque[RoundBatch] = collections.deque()
         self._cv = threading.Condition()
         self._stopping = False
-        self.busy_seconds = 0.0      # occupied (delay + compute), incl. purged
-        self.tasks_done = 0
-        self.tasks_purged = 0
+        self._purge_on_stop = False
+
+    @property
+    def busy_seconds(self) -> float:
+        return self.runner.busy_seconds
+
+    @property
+    def tasks_done(self) -> int:
+        return self.runner.tasks_done
+
+    @property
+    def tasks_purged(self) -> int:
+        return self.runner.tasks_purged
+
+    @property
+    def purging(self) -> bool:
+        """True once a purge-mode stop was requested (drains nothing)."""
+        return self._stopping and self._purge_on_stop
 
     def submit_round(self, batch: RoundBatch) -> None:
         """Enqueue one round's whole slice: one append, one notify."""
@@ -140,9 +246,19 @@ class Worker(threading.Thread):
             self._queue.append(batch)
             self._cv.notify()
 
-    def stop(self) -> None:
+    def stop(self, *, drain: bool = False) -> None:
+        """Request shutdown, deterministically.
+
+        ``drain=True`` finishes every queued batch first (delays and all);
+        ``drain=False`` (the default) *purges*: queued and in-flight
+        batches are abandoned and counted in ``tasks_purged``, and an
+        in-progress delay wait aborts within one :data:`WAIT_SLICE`.
+        Either way the thread exits on its own — results can no longer be
+        silently dropped by interpreter teardown racing a daemon thread.
+        """
         with self._cv:
             self._stopping = True
+            self._purge_on_stop = not drain
             self._cv.notify()
 
     def run(self) -> None:
@@ -152,100 +268,98 @@ class Worker(threading.Thread):
                     self._cv.wait()
                 if not self._queue:
                     return          # stopping and drained
+                if self.purging:    # stopping in purge mode: count + exit
+                    purged = sum(b.count for b in self._queue)
+                    self.runner.tasks_purged += purged
+                    self._queue.clear()
+                    return
                 batch = self._queue.popleft()
-            self._process_batch(batch)
-
-    def _process_batch(self, batch: RoundBatch) -> None:
-        for i in range(batch.count):
-            if batch.ctx.cancelled:
-                self.tasks_purged += batch.count - i
-                return
-            self._process_one(batch.ctx, batch.first_task_id + i,
-                              batch.x[i], batch.y[i],
-                              float(batch.delays[i]))
-
-    def _process_one(self, ctx, task_id: int, x: np.ndarray, y: np.ndarray,
-                     delay: float) -> None:
-        if ctx.cancelled:
-            self.tasks_purged += 1
-            return
-        t0 = clock()
-        if delay > 0.0:
-            # block on the purge event, not time.sleep: a fused round
-            # reclaims this worker immediately.
-            if ctx.cancel.wait(timeout=delay):
-                self.busy_seconds += clock() - t0
-                self.tasks_purged += 1
-                return
-        elif ctx.cancelled:
-            self.tasks_purged += 1
-            return
-        value = self._compute(x, y)
-        now = clock()
-        self.busy_seconds += now - t0
-        self.tasks_done += 1
-        self._sink(TaskResult(job_id=ctx.job_id, round_idx=ctx.round_idx,
-                              task_id=task_id, worker_id=self.worker_id,
-                              value=value, finished_at=now))
+            self.runner.run(batch, _EventGuard(batch.ctx, self))
 
 
-class WorkerPool:
-    """The cluster: ``cfg.num_workers`` concurrent workers + straggler model."""
+class WorkerPool(WorkerTransport):
+    """The thread backend: ``cfg.num_workers`` worker threads + straggler
+    model.
+
+    This is the reference implementation of the
+    :class:`~repro.runtime.transport.base.WorkerTransport` contract (the
+    ``thread`` backend re-exports it): rounds are submitted as zero-copy
+    :class:`RoundBatch` views (the seq-stamp + eq. (1) slicing loop is
+    the base class's; only the per-worker hop lives here), results flow
+    straight into ``sink`` from the worker threads, and purges propagate
+    through the shared :class:`~repro.runtime.tasks.RoundContext` cancel
+    event.
+    """
+
+    name = "thread"
 
     def __init__(self, cfg: RuntimeConfig,
                  sink: Callable[[TaskResult], None],
                  rng: Optional[np.random.Generator] = None):
-        self._cfg = cfg
-        self.straggler = StragglerModel(
-            cfg, rng if rng is not None else np.random.default_rng(cfg.seed))
-        devices = None
-        if cfg.use_jax_devices:
+        super().__init__(cfg, sink, rng)
+        self.workers = [Worker(p, sink, self._compute_for(p))
+                        for p in range(cfg.num_workers)]
+        self._started = False
+        self._shutting_down = False
+
+    def _compute_for(self, worker_id: int):
+        """Kernel factory hook; the jax backend overrides with devices."""
+        device = None
+        if self._cfg.use_jax_devices:
             import jax
             devices = jax.devices()
-        self.workers = []
-        for p in range(cfg.num_workers):
-            compute = (_jax_compute(devices[p % len(devices)])
-                       if devices else _host_compute)
-            self.workers.append(Worker(p, sink, compute))
+            device = devices[worker_id % len(devices)]
+        return make_compute(self._cfg, worker_id, device=device)
 
     def start(self) -> None:
         for w in self.workers:
             w.start()
+        self._started = True
 
-    def sample_round_delays(self, kappa: np.ndarray) -> list[np.ndarray]:
-        """Per-worker injected-delay vectors for one round's split.
+    def _dead_workers(self) -> list[str]:
+        if not self._started or self._shutting_down:
+            return []
+        return [w.name for w in self.workers if not w.is_alive()]
 
-        Split out of :meth:`dispatch_round` so the master can presample
-        the next round's delays off the critical path (in its
-        encode-ahead slot) and dispatch with buffers alone.
+    def _send_slice(self, worker_id: int, ctx: RoundContext, first_task: int,
+                    x: np.ndarray, y: np.ndarray,
+                    delays: np.ndarray) -> None:
+        """One zero-copy :class:`RoundBatch` (views, no per-task objects),
+        one queue append, one notify."""
+        self.workers[worker_id].submit_round(
+            RoundBatch(ctx=ctx, first_task_id=first_task, x=x, y=y,
+                       delays=delays))
+
+    def dispatch_round(self, ctx, X, Y, kappa, delays=None) -> None:
+        """Back-compat alias (pre-transport name) for ``submit_round``."""
+        self.submit_round(ctx, X, Y, kappa, delays=delays)
+
+    def purge_round(self, ctx) -> None:
+        """Purge one round: the shared cancel event reclaims every worker
+        holding (or delaying on) one of its tasks immediately."""
+        ctx.purge()
+
+    def shutdown(self, timeout: float = 10.0, *, drain: bool = False
+                 ) -> None:
+        """Stop all workers deterministically; raise on a leaked thread.
+
+        ``drain=False`` (default) purges outstanding batches — the master
+        has already fused or terminated every round it submitted, so
+        anything still queued is a straggler by definition.  ``drain=True``
+        completes queued work first (delays included; may block up to the
+        longest remaining injected delay).
         """
-        return [self.straggler.sample(p, int(kappa[p]))
-                for p in range(len(self.workers))]
-
-    def dispatch_round(self, ctx, X: np.ndarray, Y: np.ndarray,
-                      kappa: np.ndarray,
-                      delays: Optional[list] = None) -> None:
-        """Assign the round's T coded tasks: worker p gets a contiguous
-        ``kappa_p``-slice of the codeword as ONE zero-copy
-        :class:`RoundBatch` (views into X/Y, no per-task objects), with
-        per-task injected delays."""
-        if delays is None:
-            delays = self.sample_round_delays(kappa)
-        lo = 0
-        for p, w in enumerate(self.workers):
-            hi = lo + int(kappa[p])
-            if lo == hi:
-                continue
-            w.submit_round(RoundBatch(ctx=ctx, first_task_id=lo,
-                                      x=X[lo:hi], y=Y[lo:hi],
-                                      delays=delays[p]))
-            lo = hi
-
-    def shutdown(self, timeout: float = 10.0) -> None:
+        self._shutting_down = True
         for w in self.workers:
-            w.stop()
+            w.stop(drain=drain)
+        leaked = []
         for w in self.workers:
             w.join(timeout=timeout)
+            if w.is_alive():
+                leaked.append(w.name)
+        if leaked:
+            raise RuntimeError(
+                f"worker threads failed to stop within {timeout}s: {leaked}")
 
     @property
     def busy_seconds(self) -> np.ndarray:

@@ -1,0 +1,327 @@
+"""Backend-conformance suite: every worker transport obeys one contract.
+
+The runtime's correctness claims (§IV semantics, simulator agreement,
+adaptive-ω behavior) must hold over *any* transport, not just the thread
+pool they were first built on.  This file parametrizes the load-bearing
+runtime tests over ``backend in {thread, process}`` — the ``jax`` backend
+is smoke-only (CPU has one device; its transport loop is the thread
+backend's) — plus transport-level contract tests: wire-form round trips,
+purge watermarks, and leak-free drain-or-purge shutdown.
+
+End-to-end cases run real workers (threads or OS processes) with real
+coded matmuls; keep delay scales well above per-round overhead so the
+measured statistics are about the system, not the container's timer.
+"""
+
+import dataclasses
+import multiprocessing
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import simulator
+from repro.runtime import (BACKENDS, FusionNode, RoundContext, RuntimeConfig,
+                           TaskResult, WireBatch, make_transport, run_jobs)
+
+MU3 = (400.0, 650.0, 380.0)
+BACKENDS_FULL = ("thread", "process")
+
+
+def _cfg(**kw):
+    kw.setdefault("mu", MU3)
+    return RuntimeConfig(**kw)
+
+
+def _runtime_worker_threads() -> list[str]:
+    return [t.name for t in threading.enumerate()
+            if t.name.startswith("runtime-")]
+
+
+def _runtime_worker_processes() -> list[str]:
+    return [p.name for p in multiprocessing.active_children()
+            if p.name.startswith("runtime-")]
+
+
+class TestRegistry:
+    def test_registry_names_match_config_surface(self):
+        assert set(BACKENDS) == {"thread", "process", "jax"}
+        for name, cls in BACKENDS.items():
+            assert cls.name == name
+
+    def test_unknown_backend_rejected_at_config(self):
+        with pytest.raises(ValueError, match="backend"):
+            _cfg(backend="rpc")
+
+    def test_legacy_jax_flag_upgrades_to_jax_backend(self):
+        cfg = _cfg(straggler="none", use_jax_devices=True)
+        transport = make_transport(cfg, sink=lambda r: None)
+        assert transport.name == "jax"
+
+    def test_legacy_jax_flag_conflicts_with_other_backend(self):
+        """The alias only upgrades the default thread selection; with an
+        explicit other backend it must be rejected, not ignored."""
+        with pytest.raises(ValueError, match="use_jax_devices"):
+            _cfg(backend="process", use_jax_devices=True)
+        _cfg(backend="jax", use_jax_devices=True)   # redundant but fine
+
+
+class TestWireForms:
+    def test_round_batch_wire_round_trip(self):
+        ctx = RoundContext(job_id=3, round_idx=1)
+        ctx.seq = 17
+        X = np.arange(48, dtype=np.float64).reshape(6, 4, 2)
+        wire = WireBatch(seq=ctx.seq, job_id=ctx.job_id,
+                         round_idx=ctx.round_idx, first_task_id=2,
+                         x=X[2:4], y=X[4:6], delays=np.zeros(2))
+        import pickle
+
+        back = pickle.loads(pickle.dumps(wire))
+        assert (back.seq, back.job_id, back.round_idx) == (17, 3, 1)
+        assert back.count == 2
+        np.testing.assert_array_equal(back.x, X[2:4])
+        # pickling a view must serialize just the slice, not the base
+        assert back.x.base is None or back.x.base.shape == back.x.shape
+
+    def test_task_result_wire_round_trip(self):
+        r = TaskResult(job_id=1, round_idx=2, task_id=3, worker_id=4,
+                       value=np.eye(2), finished_at=5.5)
+        back = TaskResult.from_wire(r.to_wire())
+        assert back == dataclasses.replace(r, value=back.value)
+        np.testing.assert_array_equal(back.value, r.value)
+
+
+@pytest.mark.parametrize("backend", BACKENDS_FULL)
+class TestTransportContract:
+    """Direct transport-level checks, no master loop involved."""
+
+    def _round_trip(self, backend, cfg, kappa=None):
+        """Submit one coded round through the bare transport; fuse + decode."""
+        code = cfg.code()
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, 255, size=(32, 8)).astype(np.float64)
+        b = rng.integers(0, 255, size=(32, 8)).astype(np.float64)
+        X, Y = code.encode(a, b)
+        fusion = FusionNode()
+        transport = make_transport(cfg, sink=fusion.post)
+        transport.start()
+        try:
+            ctx = RoundContext(job_id=0, round_idx=0)
+            rf = fusion.begin_round(ctx, code.k)
+            transport.submit_round(ctx, np.asarray(X), np.asarray(Y),
+                                   cfg.load_split() if kappa is None
+                                   else kappa)
+            assert rf.wait(timeout=30.0), "round never fused"
+            transport.purge_round(ctx)
+            np.testing.assert_allclose(rf.decode(code), a.T @ b,
+                                       rtol=1e-9, atol=1e-6)
+        finally:
+            transport.shutdown()
+
+    def test_round_trip_fuses_and_decodes(self, backend):
+        self._round_trip(backend, _cfg(backend=backend, straggler="none"))
+
+    def test_seq_stamped_monotonic(self, backend):
+        cfg = _cfg(backend=backend, straggler="none")
+        fusion = FusionNode()
+        transport = make_transport(cfg, sink=fusion.post)
+        transport.start()
+        try:
+            code = cfg.code()
+            X = np.zeros((cfg.total_tasks, 8, 4))
+            seqs = []
+            for r in range(3):
+                ctx = RoundContext(0, r)
+                fusion.begin_round(ctx, code.k)
+                transport.submit_round(ctx, X, X, cfg.load_split())
+                seqs.append(ctx.seq)
+                transport.purge_round(ctx)
+            assert seqs == sorted(seqs) and len(set(seqs)) == 3
+        finally:
+            transport.shutdown()
+
+    def test_purge_reclaims_delayed_workers_immediately(self, backend):
+        """A purge must interrupt a multi-second injected delay at once:
+        the next round's fuse proves the workers came back."""
+        cfg = _cfg(backend=backend, straggler="stall", stall_workers=(0, 1, 2),
+                   stall_seconds=30.0)
+        fusion = FusionNode()
+        transport = make_transport(cfg, sink=fusion.post)
+        transport.start()
+        try:
+            code = cfg.code()
+            rng = np.random.default_rng(1)
+            a = rng.integers(0, 9, size=(16, 4)).astype(np.float64)
+            b = rng.integers(0, 9, size=(16, 4)).astype(np.float64)
+            X, Y = code.encode(a, b)
+            # round 0: every worker stalls 30 s; purge instead of waiting
+            ctx0 = RoundContext(0, 0)
+            rf0 = fusion.begin_round(ctx0, code.k)
+            transport.submit_round(ctx0, np.asarray(X), np.asarray(Y),
+                                   cfg.load_split())
+            time.sleep(0.05)
+            t0 = time.monotonic()
+            transport.purge_round(ctx0)
+            assert not rf0.wait(timeout=0.0)
+            # round 1 (no injected delay) fuses fast only if the purge
+            # actually reclaimed the stalled workers
+            cfg1 = dataclasses.replace(cfg, straggler="none")
+            del cfg1  # delays are per-batch: submit with explicit zeros
+            ctx1 = RoundContext(0, 1)
+            rf1 = fusion.begin_round(ctx1, code.k)
+            kappa = cfg.load_split()
+            zero_delays = [np.zeros(int(k)) for k in kappa]
+            transport.submit_round(ctx1, np.asarray(X), np.asarray(Y),
+                                   kappa, delays=zero_delays)
+            assert rf1.wait(timeout=10.0), "purged workers never reclaimed"
+            reclaim = time.monotonic() - t0
+            assert reclaim < 5.0, f"reclaim took {reclaim:.2f}s"
+            transport.purge_round(ctx1)
+        finally:
+            transport.shutdown()
+
+    def test_shutdown_leaks_nothing(self, backend):
+        cfg = _cfg(backend=backend, straggler="none")
+        transport = make_transport(cfg, sink=lambda r: None)
+        transport.start()
+        transport.shutdown()
+        assert not _runtime_worker_threads()
+        assert not _runtime_worker_processes()
+
+    def test_purge_mode_shutdown_reclaims_inflight_round(self, backend):
+        """The ISSUE bugfix: shutting down with an un-purged, delay-bound
+        round in flight must neither hang nor leak — queued tasks are
+        deterministically counted as purged."""
+        cfg = _cfg(backend=backend, straggler="stall", stall_workers=(0, 1, 2),
+                   stall_seconds=30.0)
+        fusion = FusionNode()
+        transport = make_transport(cfg, sink=fusion.post)
+        transport.start()
+        code = cfg.code()
+        X = np.zeros((cfg.total_tasks, 8, 4))
+        ctx = RoundContext(0, 0)
+        fusion.begin_round(ctx, code.k)
+        transport.submit_round(ctx, X, X, cfg.load_split())
+        time.sleep(0.05)
+        t0 = time.monotonic()
+        transport.shutdown(timeout=10.0)   # never purged: drain=False path
+        assert time.monotonic() - t0 < 5.0, "shutdown blocked on a stall"
+        assert transport.tasks_purged == cfg.total_tasks
+        assert transport.tasks_done == 0
+        assert not _runtime_worker_threads()
+        assert not _runtime_worker_processes()
+
+
+@pytest.mark.parametrize("backend", BACKENDS_FULL)
+class TestEndToEndConformance:
+    """The load-bearing runtime tests, identical over every backend."""
+
+    def test_completes_and_decode_verifies(self, backend):
+        cfg = _cfg(backend=backend, arrival_rate=100.0, complexity=0.2,
+                   straggler="none", seed=0)
+        res, futures = run_jobs(cfg, num_jobs=6, K=64, M=8, N=8, verify=True)
+        assert res.backend == backend
+        assert res.success.all()
+        assert (res.released == cfg.num_layers - 1).all()
+        assert not res.terminated.any()
+        assert np.nanmax(res.verify_errors) < 1e-9
+        assert not _runtime_worker_threads()
+        assert not _runtime_worker_processes()
+
+    def test_deadline_releases_verified_lower_resolution(self, backend):
+        """The §IV acceptance scenario per backend: a straggler plus a
+        deadline the final resolution misses still releases a correct
+        lower resolution, MSB-first delays ordered.
+
+        Thresholds carry slack (res-0 >= 0.9, not == 1.0): a 30 ms
+        wall-clock deadline on a loaded container can cost an occasional
+        res-0 — the claim under test is the qualitative §IV gap between
+        res-0 and the final resolution, not a hard-real-time guarantee."""
+        cfg = _cfg(backend=backend, arrival_rate=14.0, complexity=8.0,
+                   deadline=0.030, straggler="stall", stall_workers=(2,),
+                   stall_seconds=2.0, seed=0)
+        res, _ = run_jobs(cfg, num_jobs=20, K=64, M=8, N=8, verify=True)
+        assert res.terminated.any()
+        sr = res.success_rate()
+        assert sr[0] >= 0.9
+        assert sr[-1] < 1.0 and sr[-1] < sr[0]
+        term = np.flatnonzero(res.terminated)
+        assert (res.released[term] >= 0).mean() >= 0.9   # partials shipped
+        assert np.nanmax(res.verify_errors) < 1e-9
+        assert np.all(np.diff(res.mean_delay()) > 0)
+
+    def test_runtime_agrees_with_simulator(self, backend):
+        """Measured mean res-0 delay under exp stragglers agrees with
+        simulate() on the same configuration — over any transport.
+
+        Sized for the low-utilization regime (~37 ms/task delays,
+        inter-arrival >> service): queueing amplifies *any* per-round
+        overhead nonlinearly, and the process backend's IPC latency on a
+        small container is ~2-3 ms/round of scheduler wake-ups, so the
+        comparison must be about the order statistic the simulator
+        models, not about M/G/1 sensitivity to the container's core
+        count.  At this scale both backends sit within a few percent of
+        the simulator (dev container: thread ~0.97x, process ~1.02x)."""
+        cfg = _cfg(backend=backend, arrival_rate=0.8, complexity=60.0,
+                   straggler="exp", seed=2)
+        res, _ = run_jobs(cfg, num_jobs=8, K=64, M=8, N=8)
+        sim = simulator.simulate(cfg.to_system_config(), 4000, layered=True,
+                                 seed=7)
+        md, sd = res.mean_delay(), sim.mean_delay()
+        assert md[0] == pytest.approx(sd[0], rel=0.30)
+        assert np.all(np.diff(md) > 0) and np.all(np.diff(sd) > 0)
+
+    def test_adaptive_omega_signals_travel(self, backend):
+        """The ROADMAP transport-agnostic claim: RoundObservation signals
+        (wait/stale/margin/utilization) drive the same ω retune loop over
+        any backend — the regime-shift scenario recovers res-0 success."""
+        base = _cfg(backend=backend, arrival_rate=14.0, omega=1.0,
+                    complexity=8.0, deadline=0.04, straggler="shift",
+                    stall_workers=(2,), shift_at=0.6, stall_seconds=1.0,
+                    adapt="fixed", seed=0)
+        worst, _ = run_jobs(base, 24, K=64, M=8, N=8)
+        adapt_cfg = dataclasses.replace(base, adapt="deadline-margin")
+        adapt, _ = run_jobs(adapt_cfg, 24, K=64, M=8, N=8)
+        sr_worst = worst.success_rate()[0]
+        sr_adapt = adapt.success_rate()[0]
+        assert sr_worst < 0.85           # the outage really binds at T = k
+        assert sr_adapt >= sr_worst + 0.15
+        ctl = adapt.controller
+        assert ctl["switches"] >= 1 and ctl["omega_final"] > 1.0
+        # utilization signal arrived over the transport (non-degenerate)
+        assert adapt.worker_busy.shape == (len(MU3),)
+        assert adapt.worker_busy.sum() > 0.0
+
+
+class TestProcessLiveness:
+    """A lost worker process must fail the run promptly, never hang it."""
+
+    def test_dead_worker_raises_promptly(self):
+        cfg = _cfg(backend="process", straggler="none")
+        transport = make_transport(cfg, sink=lambda r: None)
+        transport.start()
+        try:
+            transport.assert_alive()            # healthy: no-op
+            victim = transport.processes[0]
+            victim.terminate()                  # an OOM-kill stand-in
+            victim.join(timeout=5.0)
+            with pytest.raises(RuntimeError, match="died"):
+                transport.assert_alive()
+        finally:
+            transport.shutdown()
+        assert not _runtime_worker_processes()
+
+
+class TestJaxBackendSmoke:
+    """CPU smoke only: one local device, thread transport loop."""
+
+    def test_jax_backend_runs_and_verifies(self):
+        cfg = _cfg(backend="jax", arrival_rate=100.0, complexity=0.2,
+                   straggler="none", seed=0)
+        res, _ = run_jobs(cfg, num_jobs=3, K=64, M=8, N=8, verify=True)
+        assert res.backend == "jax"
+        assert res.success.all()
+        # float32 device compute: looser than host float64, still tight
+        assert np.nanmax(res.verify_errors) < 1e-4
+        assert not _runtime_worker_threads()
