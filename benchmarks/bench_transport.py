@@ -1,21 +1,31 @@
 """Transport benchmark: per-backend overhead + delay under real stragglers.
 
-Measures, for each worker transport (thread / process; jax is CPU-smoke
-hardware-dependent and excluded from the comparison by default):
+Measures, for each worker transport (thread / process / socket-on-
+localhost; jax is CPU-smoke hardware-dependent and excluded from the
+comparison by default):
 
 1. **Dispatch + fusion overhead per round** — a no-delay, no-deadline run
    where worker compute is ~free, so wall time per round is dominated by
    the transport's submit → compute → return-path cost (pipe serialization
-   and drain-thread hop for the process backend vs direct calls for the
-   thread backend), plus the measured per-stage dispatch cost.
+   and drain-thread hop for the process backend, TCP frames and receiver
+   threads for the socket backend, direct calls for the thread backend),
+   plus the measured per-stage dispatch cost.
 2. **res-0 vs final-resolution delay** under the ``exp`` and ``shift``
    straggler regimes — the paper's layered-resolution story measured over
-   real parallelism: identical master-side RNG means both backends face
+   real parallelism: identical master-side RNG means every backend faces
    the same injected straggler trace.
 3. **The Fig. 5 qualitative claim on the process backend** — a deadline
    chosen so the *final* resolution misses on a meaningful fraction of
    jobs while res-0 still lands: early resolutions beat a deadline the
    full computation cannot, on genuinely GIL-free workers.
+4. **Result-path compression (socket)** — big coded blocks over the frame
+   protocol with compression off vs auto: raw-vs-wire bytes on both
+   paths and the measured ratio, the JSON's compression story.
+
+The socket rows spawn a
+:class:`repro.runtime.transport.socket_host.LocalCluster` (real worker
+host processes on localhost ports), so its numbers include genuine frame
+serialization and kernel TCP hops, but not a physical network's latency.
 
 Emits ``BENCH_transport.json``.
 
@@ -25,6 +35,7 @@ Run:  PYTHONPATH=src python benchmarks/bench_transport.py --jobs 120
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import pathlib
@@ -34,9 +45,21 @@ import numpy as np
 
 from repro.runtime import RuntimeConfig, delay_table, format_delay_table, \
     run_jobs
+from repro.runtime.transport.socket_host import LocalCluster
 
 MU = (385.95, 650.92, 373.40, 415.75, 373.98)   # the paper's §IV cluster
-COMPARE_BACKENDS = ("thread", "process")
+COMPARE_BACKENDS = ("thread", "process", "socket")
+
+
+@contextlib.contextmanager
+def _backend_env(backend: str):
+    """Yield the extra RuntimeConfig kwargs a backend needs (and own the
+    localhost cluster for the socket rows)."""
+    if backend == "socket":
+        with LocalCluster(len(MU)) as cluster:
+            yield {"hosts": cluster.hosts}
+    else:
+        yield {}
 
 
 def _run(cfg: RuntimeConfig, jobs: int) -> dict:
@@ -64,6 +87,7 @@ def _run(cfg: RuntimeConfig, jobs: int) -> dict:
         "delay_per_resolution": rows,
         "worker_utilization": [round(float(u), 4)
                                for u in result.utilization],
+        "transport_stats": result.transport_stats,
     }
 
 
@@ -71,9 +95,11 @@ def bench_overhead(jobs: int) -> list[dict]:
     """No injected delay: per-round wall cost IS the transport overhead."""
     out = []
     for backend in COMPARE_BACKENDS:
-        cfg = RuntimeConfig(mu=MU, arrival_rate=1000.0, complexity=0.2,
-                            straggler="none", backend=backend, seed=0)
-        r = _run(cfg, jobs)
+        with _backend_env(backend) as extra:
+            cfg = RuntimeConfig(mu=MU, arrival_rate=1000.0, complexity=0.2,
+                                straggler="none", backend=backend, seed=0,
+                                **extra)
+            r = _run(cfg, jobs)
         # with zero injected delay, (dispatch + wait) per round is the
         # submit -> compute -> fuse round-trip latency of the transport
         r["roundtrip_us_per_round"] = round(
@@ -87,7 +113,7 @@ def bench_overhead(jobs: int) -> list[dict]:
 
 
 def bench_regimes(jobs: int) -> list[dict]:
-    """res-0 / final delay, thread vs process, exp and shift regimes."""
+    """res-0 / final delay per backend, exp and shift regimes."""
     regimes = {
         "exp": dict(arrival_rate=12.0, complexity=10.0, straggler="exp"),
         "shift": dict(arrival_rate=12.0, complexity=10.0, straggler="shift",
@@ -97,14 +123,52 @@ def bench_regimes(jobs: int) -> list[dict]:
     out = []
     for regime, kw in regimes.items():
         for backend in COMPARE_BACKENDS:
-            cfg = RuntimeConfig(mu=MU, backend=backend, seed=3, **kw)
-            r = _run(cfg, jobs)
+            with _backend_env(backend) as extra:
+                cfg = RuntimeConfig(mu=MU, backend=backend, seed=3, **kw,
+                                    **extra)
+                r = _run(cfg, jobs)
             r["regime"] = regime
             out.append(r)
             print(f"[{regime:>5}] {backend:>8}: res0 "
                   f"{r['res0_mean_delay'] * 1e3:7.2f} ms, final "
                   f"{r['final_mean_delay'] * 1e3:7.2f} ms, success "
                   f"{r['success_rate']}")
+    return out
+
+
+def bench_compression(jobs: int) -> list[dict]:
+    """Socket frame compression on big blocks: off vs auto.
+
+    Uses M = N = 96 so each task result is a 48x48 float64 block (~18 KB
+    pickled — comfortably above the auto threshold) and each dispatched
+    codeword slice is proportionally bigger: the regime the ROADMAP's
+    "result-path compression for big blocks" follow-on names.  Reports
+    raw-vs-wire bytes both ways and the result-path ratio.
+    """
+    out = []
+    with LocalCluster(len(MU)) as cluster:
+        for compress in ("none", "auto"):
+            cfg = RuntimeConfig(mu=MU, arrival_rate=1000.0, complexity=0.2,
+                                straggler="none", backend="socket",
+                                hosts=cluster.hosts, compress=compress,
+                                seed=0)
+            t0 = time.perf_counter()
+            result, _ = run_jobs(cfg, jobs, K=64, M=96, N=96)
+            wall = time.perf_counter() - t0
+            ws = result.transport_stats or {}
+            row = {
+                "compress": compress,
+                "jobs": jobs,
+                "wall_seconds": round(wall, 3),
+                "res0_mean_delay": delay_table(result)[0]["mean_delay"],
+                **ws,
+            }
+            out.append(row)
+            print(f"[compress] {compress:>5}: result path "
+                  f"{ws.get('result_raw_bytes', 0) / 1e6:7.2f} MB raw -> "
+                  f"{ws.get('result_wire_bytes', 0) / 1e6:7.2f} MB wire "
+                  f"(ratio {ws.get('compression_ratio', 1.0):.2f}x), "
+                  f"wall {wall:.2f} s")
     return out
 
 
@@ -143,6 +207,7 @@ def main(argv=None) -> int:
         "overhead": bench_overhead(args.jobs),
         "regimes": bench_regimes(args.jobs),
         "deadline_race": bench_deadline_race(args.jobs),
+        "compression": bench_compression(max(10, args.jobs // 4)),
     }
     path = pathlib.Path(args.out)
     path.write_text(json.dumps(report, indent=2))

@@ -1,0 +1,31 @@
+"""Version-tolerant shims over the pinned JAX's moved/renamed APIs.
+
+The container pins jax 0.4.37, where some of the newer aliases this code
+was written against do not exist yet:
+
+* ``jax.tree.flatten_with_path`` landed after 0.4.37; the functionality
+  has lived in ``jax.tree_util.tree_flatten_with_path`` since 0.4.6.
+* ``jax.shard_map`` (top-level) is newer than the pinned version; the
+  implementation is ``jax.experimental.shard_map.shard_map``.
+
+Each shim prefers the modern spelling when present (so nothing changes on
+a newer JAX) and falls back to the stable long-form path otherwise.  Keep
+this module dependency-free besides jax itself — it sits below everything
+in the import graph.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.tree_util
+
+__all__ = ["tree_flatten_with_path", "shard_map"]
+
+tree_flatten_with_path = getattr(
+    getattr(jax, "tree", None), "flatten_with_path", None)
+if tree_flatten_with_path is None:
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map  # noqa: F401

@@ -129,6 +129,40 @@ def _parse(text: str) -> tuple[dict, Optional[str]]:
     return comps, entry
 
 
+def _operand_names(line: str) -> list[str]:
+    """Operand value names from an instruction's ``op(...)`` list.
+
+    XLA emits operands either bare (``%name``) or typed
+    (``f32[128,128]{1,0} %name`` — the form newer dumps use); either way
+    the value name is the last whitespace-separated token of each
+    comma-separated entry.
+    """
+    ops_m = _OPERANDS_RE.search(line)
+    if not ops_m:
+        return []
+    names = []
+    for entry in _split_top_level(ops_m.group(1)):
+        toks = entry.strip().split()
+        if toks:
+            names.append(toks[-1].lstrip("%"))
+    return names
+
+
+def _split_top_level(text: str) -> list[str]:
+    """Split on commas outside ``[...]``/``{...}`` (shape dims, layouts)."""
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(text):
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(text[start:i])
+            start = i + 1
+    out.append(text[start:])
+    return out
+
+
 def _dot_flops(instr: _Instr, comp: _Computation) -> float:
     out_elems = 1
     m = _SHAPE_RE.search(instr.type_str)
@@ -136,20 +170,24 @@ def _dot_flops(instr: _Instr, comp: _Computation) -> float:
         for dim in m.group(2).split(","):
             if dim:
                 out_elems *= int(dim)
-    # contracting size from lhs operand shape
+    # contracting size from lhs operand shape; typed operand entries carry
+    # the shape inline, so fall back to parsing the entry itself when the
+    # value name is defined in another computation (e.g. a parameter)
     cm = _CONTRACT_RE.search(instr.line)
-    ops_m = _OPERANDS_RE.search(instr.line)
+    operands = _operand_names(instr.line)
     contract = 1
-    if cm and ops_m:
-        operands = [o.strip().lstrip("%") for o in ops_m.group(1).split(",")]
-        if operands:
-            lhs_type = comp.shapes.get(operands[0], "")
-            sm = _SHAPE_RE.search(lhs_type)
-            if sm:
-                dims = [int(x) for x in sm.group(2).split(",") if x]
-                for ci in cm.group(1).split(","):
-                    if ci and int(ci) < len(dims):
-                        contract *= dims[int(ci)]
+    if cm and operands:
+        lhs_type = comp.shapes.get(operands[0], "")
+        if not _SHAPE_RE.search(lhs_type):
+            ops_m = _OPERANDS_RE.search(instr.line)
+            lhs_type = (_split_top_level(ops_m.group(1))[0]
+                        if ops_m else "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm:
+            dims = [int(x) for x in sm.group(2).split(",") if x]
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
     return 2.0 * out_elems * contract
 
 
@@ -188,11 +226,15 @@ def _instr_bytes(instr: _Instr, comp: _Computation) -> float:
     total = float(_shape_bytes_all(instr.type_str))
     ops_m = _OPERANDS_RE.search(instr.line)
     if ops_m:
-        for o in ops_m.group(1).split(","):
-            o = o.strip().lstrip("%")
-            t = comp.shapes.get(o)
+        for entry in _split_top_level(ops_m.group(1)):
+            toks = entry.strip().split()
+            if not toks:
+                continue
+            t = comp.shapes.get(toks[-1].lstrip("%"))
             if t:
                 total += _shape_bytes_all(t)
+            elif len(toks) > 1:       # typed operand: shape is inline
+                total += _shape_bytes_all(" ".join(toks[:-1]))
     return total
 
 

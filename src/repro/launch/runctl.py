@@ -14,6 +14,12 @@ Examples::
 
     # same cluster, cross-checked against the simulator
     PYTHONPATH=src python -m repro.launch.runctl --jobs 100 --compare-sim
+
+    # multi-host: start a worker host per machine, then drive them
+    PYTHONPATH=src python -m repro.launch.runctl serve-worker --port 7001
+    PYTHONPATH=src python -m repro.launch.runctl --jobs 100 \
+        --backend socket --hosts hostA:7001,hostB:7001,hostC:7001 \
+        --mu 400,650,380
 """
 
 from __future__ import annotations
@@ -21,6 +27,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import sys
 
 import numpy as np
 
@@ -52,7 +59,9 @@ def build_config(args: argparse.Namespace) -> RuntimeConfig:
         burst_period=args.burst_period, burst_len=args.burst_len,
         adapt=args.adapt, omega_min=args.omega_min,
         omega_max=args.omega_max, backend=args.backend,
-        use_jax_devices=args.jax_devices, seed=args.seed)
+        use_jax_devices=args.jax_devices,
+        hosts=tuple(h for h in args.hosts.split(",") if h),
+        compress=args.compress, seed=args.seed)
 
 
 def summarize(cfg: RuntimeConfig, result) -> dict:
@@ -82,6 +91,7 @@ def summarize(cfg: RuntimeConfig, result) -> dict:
         "stage_rounds": int(result.stage_rounds),
         "controller": result.controller,
         "omega_trace": result.omega_trace,
+        "transport_stats": result.transport_stats,
     }
     if result.verify_errors is not None:
         finite = result.verify_errors[np.isfinite(result.verify_errors)]
@@ -91,6 +101,13 @@ def summarize(cfg: RuntimeConfig, result) -> dict:
 
 
 def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "serve-worker":
+        # the remote half of the socket backend: run one worker host
+        # (kept out of the flag namespace below — it is a different
+        # program sharing the runctl entrypoint)
+        from repro.launch import worker_host
+        return worker_host.main(argv[1:])
     ap = argparse.ArgumentParser(
         prog="runctl", description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -134,10 +151,21 @@ def main(argv=None) -> int:
     ap.add_argument("--omega-max", type=float, default=3.0)
     ap.add_argument("--backend", choices=BACKEND_NAMES, default="thread",
                     help="worker transport: thread (in-process pool), "
-                         "process (multiprocessing workers, GIL-free), or "
-                         "jax (one thread worker per local JAX device)")
+                         "process (multiprocessing workers, GIL-free), "
+                         "jax (one thread worker per local JAX device), or "
+                         "socket (remote worker hosts over TCP — see "
+                         "'runctl serve-worker')")
     ap.add_argument("--jax-devices", action="store_true",
                     help="legacy alias for --backend jax")
+    ap.add_argument("--hosts", default="",
+                    help="socket backend: comma list of host:port worker "
+                         "hosts, one per --mu entry (each running "
+                         "'runctl serve-worker')")
+    ap.add_argument("--compress", choices=("auto", "none", "zlib", "lz4"),
+                    default="auto",
+                    help="socket backend frame compression (auto = "
+                         "compress big payloads with the best available "
+                         "codec)")
     ap.add_argument("--K", type=int, default=64)
     ap.add_argument("--M", type=int, default=8)
     ap.add_argument("--N", type=int, default=8)
@@ -164,6 +192,9 @@ def main(argv=None) -> int:
     if args.jax_devices and args.backend not in ("thread", "jax"):
         ap.error(f"--jax-devices is a legacy alias for --backend jax and "
                  f"conflicts with --backend {args.backend}")
+    if args.backend == "socket" and not args.hosts:
+        ap.error("--backend socket needs --hosts host:port,... (one per "
+                 "--mu entry; start each with 'runctl serve-worker')")
 
     cfg = build_config(args)
     print(f"[runctl] {cfg.num_workers} workers ({cfg.backend} backend), "

@@ -295,14 +295,25 @@ class Master:
                     ts = clock()
                     if t_term is None:
                         # unbounded wait: slice it so a worker that died
-                        # (OOM-kill, crashed child) raises promptly via
-                        # the transport's liveness check instead of
-                        # blocking the run forever on a round that can no
-                        # longer reach k results
+                        # (OOM-kill, crashed child, dead remote host)
+                        # raises promptly via the transport's liveness
+                        # check instead of blocking the run forever on a
+                        # round that can no longer reach k results
                         while not (fused := rf.wait(5.0)):
                             pool.assert_alive()
                     else:
-                        fused = rf.wait(max(0.0, t_term - clock()))
+                        # bounded wait: still slice it — a multi-second
+                        # §IV deadline must not delay dead-host detection
+                        # (socket heartbeats, process joins) to the
+                        # termination instant
+                        while True:
+                            remaining = t_term - clock()
+                            if remaining <= 0.0:
+                                fused = rf.wait(0.0)
+                                break
+                            if (fused := rf.wait(min(remaining, 5.0))):
+                                break
+                            pool.assert_alive()
                     tw = clock()
                     stage["wait"] += tw - ts
                     pool.purge_round(ctx)  # reclaim the round's stragglers
@@ -351,6 +362,10 @@ class Master:
         finally:
             pool.shutdown()
 
+        # transports that cross a wire expose frame/byte/compression
+        # counters (socket backend); in-process ones have nothing to say
+        transport_stats = getattr(pool, "wire_stats", None)
+
         result = metrics.RuntimeResult(
             arrivals=arrivals, starts=starts, ends=ends,
             layer_compute=layer_compute, success=success,
@@ -359,7 +374,8 @@ class Master:
             stale_results=self.fusion.stale_results, released=released,
             verify_errors=verify_errors, stage_seconds=stage,
             stage_rounds=rounds_timed, controller=ctrl.summary(),
-            omega_trace=list(ctrl.trace), backend=pool.name)
+            omega_trace=list(ctrl.trace), backend=pool.name,
+            transport_stats=transport_stats)
         return result, futures
 
 

@@ -59,9 +59,13 @@ class RuntimeResult(simulator.SimResult):
                          omega and T, new kappa, reason, prime seconds);
                          empty list when omega never moved.
     ``backend``          the worker transport that executed the run
-                         (``thread`` / ``process`` / ``jax``) — the
-                         effective backend, after any legacy-flag
-                         upgrade, for bench/JSON provenance.
+                         (``thread`` / ``process`` / ``jax`` /
+                         ``socket``) — the effective backend, after any
+                         legacy-flag upgrade, for bench/JSON provenance.
+    ``transport_stats``  wire-level counters for transports that cross a
+                         network (socket backend: frames, dispatch/result
+                         raw-vs-wire bytes, compression ratio); None for
+                         in-process backends.
 
     ``kappa`` (inherited) is the eq. (1) split of the *initial* geometry;
     under an adaptive policy the per-retune splits live in
@@ -80,6 +84,7 @@ class RuntimeResult(simulator.SimResult):
     controller: dict | None = None
     omega_trace: list | None = None
     backend: str = "thread"
+    transport_stats: dict | None = None
 
     @property
     def utilization(self) -> np.ndarray:

@@ -35,11 +35,17 @@ import numpy as np
 from repro.core import coding, layering, scheduling
 
 __all__ = ["RuntimeConfig", "JobSpec", "RoundContext", "RoundBatch",
-           "TaskResult", "WireBatch", "BACKEND_NAMES"]
+           "TaskResult", "WireBatch", "BACKEND_NAMES", "COMPRESS_MODES"]
 
 #: Worker-transport backends the runtime can dispatch over (see
 #: :mod:`repro.runtime.transport`).
-BACKEND_NAMES = ("thread", "process", "jax")
+BACKEND_NAMES = ("thread", "process", "jax", "socket")
+
+#: Result/batch compression modes for the socket transport's frame
+#: protocol (see :mod:`repro.runtime.transport.socket_host`): ``auto``
+#: compresses payloads above a size threshold with the best available
+#: codec, ``zlib``/``lz4`` force one codec, ``none`` disables.
+COMPRESS_MODES = ("auto", "none", "zlib", "lz4")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +88,8 @@ class RuntimeConfig:
     omega_max: float = 3.0         # adaptive omega upper bound
     backend: str = "thread"        # worker transport: BACKEND_NAMES key
     use_jax_devices: bool = False  # legacy alias for backend="jax"
+    hosts: tuple[str, ...] = ()    # socket backend: "host:port" per worker
+    compress: str = "auto"         # socket frame codec: COMPRESS_MODES key
     seed: int = 0
 
     def __post_init__(self):
@@ -97,6 +105,26 @@ class RuntimeConfig:
             raise ValueError(
                 f"use_jax_devices (legacy alias for backend='jax') "
                 f"conflicts with backend={self.backend!r}")
+        if self.compress not in COMPRESS_MODES:
+            raise ValueError(f"unknown compress mode {self.compress!r}; "
+                             f"known: {COMPRESS_MODES}")
+        if self.backend == "socket":
+            if len(self.hosts) != self.num_workers:
+                raise ValueError(
+                    f"backend='socket' needs one host:port per worker: got "
+                    f"{len(self.hosts)} hosts for {self.num_workers} "
+                    f"workers (mu has {self.num_workers} entries)")
+            for h in self.hosts:
+                host, sep, port = h.rpartition(":")
+                if not sep or not host or not port.isdigit():
+                    raise ValueError(
+                        f"socket host {h!r} is not of the form 'host:port'")
+        elif self.hosts:
+            # hosts with a non-socket backend would be silently ignored —
+            # reject the contradiction, mirroring the use_jax_devices rule
+            raise ValueError(
+                f"hosts= is only meaningful with backend='socket' "
+                f"(got backend={self.backend!r})")
         if self.omega < 1.0:
             raise ValueError(f"redundancy ratio must be >= 1, got {self.omega}")
         if any(not 0 <= w < len(self.mu) for w in self.stall_workers):

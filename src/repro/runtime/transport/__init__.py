@@ -15,6 +15,12 @@ result return into the fusion sink) — and three backends behind it:
     One worker per local JAX device
     (:mod:`repro.runtime.transport.jax_device`): thread loop, device-pinned
     async-dispatch compute.
+``socket``
+    TCP worker hosts on other machines
+    (:mod:`repro.runtime.transport.socket_host`): length-prefixed
+    compressed frames, purge watermarks, heartbeat liveness,
+    reconnect-or-fail — the multi-HOST backend (``runctl serve-worker``
+    runs the remote side).
 
 The master never names a backend class — it calls :func:`make_transport`
 with the run's :class:`~repro.runtime.tasks.RuntimeConfig`, whose
@@ -39,14 +45,15 @@ from repro.runtime.tasks import RuntimeConfig, TaskResult
 from repro.runtime.transport.base import StragglerModel, WorkerTransport
 
 __all__ = ["WorkerTransport", "StragglerModel", "ThreadTransport",
-           "ProcessTransport", "JaxDeviceTransport", "BACKENDS",
-           "make_transport"]
+           "ProcessTransport", "JaxDeviceTransport", "SocketTransport",
+           "BACKENDS", "make_transport"]
 
 #: backend name -> (module, class) — the ``RuntimeConfig.backend`` registry.
 _BACKEND_PATHS: dict[str, tuple[str, str]] = {
     "thread": ("repro.runtime.transport.thread", "ThreadTransport"),
     "process": ("repro.runtime.transport.process", "ProcessTransport"),
     "jax": ("repro.runtime.transport.jax_device", "JaxDeviceTransport"),
+    "socket": ("repro.runtime.transport.socket_host", "SocketTransport"),
 }
 
 
@@ -84,7 +91,7 @@ class _BackendRegistry(dict):
 BACKENDS: dict[str, Type[WorkerTransport]] = _BackendRegistry()
 
 _LAZY_CLASSES = {"ThreadTransport": "thread", "ProcessTransport": "process",
-                 "JaxDeviceTransport": "jax"}
+                 "JaxDeviceTransport": "jax", "SocketTransport": "socket"}
 
 
 def __getattr__(name: str):

@@ -1,0 +1,851 @@
+"""The ``socket`` backend: TCP worker hosts behind the transport seam.
+
+The first genuinely multi-HOST transport: each worker is a standalone
+``worker_host`` process (``runctl serve-worker``, possibly on another
+machine) listening on a TCP port; the master-side :class:`SocketTransport`
+dials one connection per worker and speaks a length-prefixed frame
+protocol over it.  The §IV contract is the process backend's, faced at a
+network for the first time:
+
+* **Dispatch** — each worker's ``kappa_p``-slice ships as a
+  :class:`~repro.runtime.tasks.WireBatch` inside a ``("round", wire)``
+  frame.  Frames above a size threshold are transparently compressed
+  (zlib, or lz4 when installed — the big coded blocks and result matrices
+  are the ROADMAP's "result-path compression" case); the frame header is
+  self-describing, so each side decodes whatever the other chose.
+* **Purge** — ``("purge", seq)`` is the same watermark message the
+  process backend uses: the worker drops every batch with
+  ``seq <= watermark``, queued *or* currently delaying (the delay wait
+  polls the socket, so a purge interrupts it immediately).
+* **Results** — ``("result", wire, busy_seconds)`` frames return on the
+  same connection; a master-side receiver thread per worker rebuilds
+  :class:`~repro.runtime.tasks.TaskResult` and posts it to the fusion
+  sink.
+* **Liveness** — a master-side heartbeat thread pings every worker; a
+  worker that has not produced *any* frame (pong, result, stats) within
+  ``heartbeat_timeout`` — or whose connection dropped and could not be
+  re-established — is reported dead via
+  :meth:`~repro.runtime.transport.base.WorkerTransport.assert_alive`, so
+  a SIGKILLed host fails the run promptly instead of hanging fusion.
+* **Reconnect-or-fail** — a dropped connection (sever, host restart
+  window) is re-dialed a bounded number of times; on success the master
+  re-sends its hello carrying the session id and the current purge
+  watermark, so rounds lost with the connection are cleanly dropped by
+  the worker the moment it resumes.  On failure the worker is dead.
+* **Shutdown** — ``("stop", drain)``: the worker drains or purges its
+  queue, answers with a final ``("stats", ...)`` envelope (exact
+  ``tasks_done``/``tasks_purged``/``busy_seconds``), and closes the
+  session; the host then loops back to ``accept`` for the next master.
+  No master-side thread outlives the call.
+
+Frame layout (16-byte header, network byte order)::
+
+    0      4    5     6      8         12        16
+    ┌──────┬────┬─────┬──────┬─────────┬─────────┐
+    │MAGIC │ver │codec│ rsvd │ raw_len │wire_len │ payload (wire_len B)
+    └──────┴────┴─────┴──────┴─────────┴─────────┘
+    MAGIC = b"LRF1"; codec ∈ {none, zlib, lz4}; raw_len is the
+    decompressed pickle size (integrity-checked after decode).
+
+The worker-side event loop *is* the process backend's
+(:class:`~repro.runtime.transport.process._WorkerLoop` over a socket
+adapter), so purge/drain/occupancy semantics cannot drift between the
+single-host and multi-host paths.  :class:`LocalCluster` spawns worker
+hosts on localhost ports — the conformance suite's stand-in for a real
+cluster, and the fault-injection harness (SIGKILL a host, sever a
+connection).
+
+Security note: frames carry pickles, as the multiprocessing backend's
+pipes do.  The protocol authenticates nothing — run it on a trusted
+network segment only (the paper's cluster model), never an open port on
+the internet.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import select
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+import uuid
+import zlib
+from typing import Callable, Optional
+
+import numpy as np
+import pickle
+
+from repro.runtime.tasks import (RoundContext, RuntimeConfig, TaskResult,
+                                 WireBatch)
+from repro.runtime.transport.base import WorkerTransport
+from repro.runtime.transport.process import _WorkerLoop
+
+__all__ = ["SocketTransport", "LocalCluster", "FrameError", "encode_frame",
+           "decode_frame", "serve_worker_host", "MAGIC", "CODECS"]
+
+clock = time.monotonic
+
+# -- frame protocol -----------------------------------------------------------
+
+MAGIC = b"LRF1"
+_VERSION = 1
+#: header: magic(4) version(1) codec(1) reserved(2) raw_len(4) wire_len(4)
+_HEADER = struct.Struct("!4sBBHII")
+HEADER_SIZE = _HEADER.size
+
+CODEC_NONE, CODEC_ZLIB, CODEC_LZ4 = 0, 1, 2
+CODECS = {"none": CODEC_NONE, "zlib": CODEC_ZLIB, "lz4": CODEC_LZ4}
+
+#: "auto" mode compresses only payloads at least this large: the typical
+#: control message (purge/ping/stats) is tens of bytes and would pay the
+#: codec call for nothing, while coded blocks and result matrices of any
+#: interesting size clear it easily.
+COMPRESS_MIN_BYTES = 4096
+
+try:                               # optional: the container may lack lz4
+    import lz4.frame as _lz4
+except ImportError:                # pragma: no cover - depends on image
+    _lz4 = None
+
+
+def have_lz4() -> bool:
+    """True when the optional lz4 codec is importable."""
+    return _lz4 is not None
+
+
+class FrameError(Exception):
+    """A frame failed to parse: bad magic/version/codec, truncation, or a
+    decompressed-size mismatch.  Deliberately distinct from the connection
+    errors (EOFError/OSError) that mean the peer went away."""
+
+
+def _compress(payload: bytes, codec: int) -> bytes:
+    if codec == CODEC_ZLIB:
+        return zlib.compress(payload, 1)
+    if codec == CODEC_LZ4:
+        return _lz4.compress(payload)
+    return payload
+
+
+def _decompress(payload: bytes, codec: int) -> bytes:
+    if codec == CODEC_ZLIB:
+        return zlib.decompress(payload)
+    if codec == CODEC_LZ4:
+        if _lz4 is None:
+            raise FrameError("frame compressed with lz4 but lz4 is not "
+                             "installed on this side")
+        return _lz4.decompress(payload)
+    return payload
+
+
+def encode_frame(obj, compress: str = "auto") -> bytes:
+    """Serialize ``obj`` into one self-describing frame.
+
+    ``compress`` is a :data:`~repro.runtime.tasks.COMPRESS_MODES` key:
+    ``auto`` compresses payloads >= :data:`COMPRESS_MIN_BYTES` with lz4
+    when available (fast path) else zlib, and keeps the compressed form
+    only if it is actually smaller; ``zlib``/``lz4`` force the codec;
+    ``none`` disables.
+    """
+    payload = pickle.dumps(obj, protocol=4)
+    raw_len = len(payload)
+    codec = CODEC_NONE
+    if compress == "zlib":
+        codec = CODEC_ZLIB
+    elif compress == "lz4":
+        if _lz4 is None:
+            raise ValueError("compress='lz4' but lz4 is not installed; "
+                             "use 'zlib' or 'auto'")
+        codec = CODEC_LZ4
+    elif compress == "auto" and raw_len >= COMPRESS_MIN_BYTES:
+        codec = CODEC_LZ4 if _lz4 is not None else CODEC_ZLIB
+    elif compress not in ("auto", "none"):
+        raise ValueError(f"unknown compress mode {compress!r}")
+    if codec != CODEC_NONE:
+        packed = _compress(payload, codec)
+        if len(packed) < raw_len:
+            payload = packed
+        else:                      # incompressible: ship raw, save the CPU
+            codec = CODEC_NONE
+    header = _HEADER.pack(MAGIC, _VERSION, codec, 0, raw_len, len(payload))
+    return header + payload
+
+
+def decode_frame(buf: bytes) -> tuple:
+    """Parse one frame from ``buf``; returns ``(obj, consumed_bytes)``.
+
+    Raises :class:`FrameError` on a short/garbage header, an unknown
+    version or codec, a truncated payload, or a decompressed size that
+    does not match the header's ``raw_len``.
+    """
+    if len(buf) < HEADER_SIZE:
+        raise FrameError(f"truncated header: {len(buf)} < {HEADER_SIZE} "
+                         f"bytes")
+    magic, version, codec, _, raw_len, wire_len = _HEADER.unpack(
+        buf[:HEADER_SIZE])
+    if magic != MAGIC:
+        raise FrameError(f"bad magic {magic!r} (expected {MAGIC!r})")
+    if version != _VERSION:
+        raise FrameError(f"unsupported frame version {version}")
+    if codec not in (CODEC_NONE, CODEC_ZLIB, CODEC_LZ4):
+        raise FrameError(f"unknown codec {codec}")
+    end = HEADER_SIZE + wire_len
+    if len(buf) < end:
+        raise FrameError(f"truncated payload: have {len(buf) - HEADER_SIZE} "
+                         f"of {wire_len} bytes")
+    try:
+        payload = _decompress(bytes(buf[HEADER_SIZE:end]), codec)
+    except FrameError:
+        raise
+    except Exception as e:
+        # zlib raises zlib.error but lz4 raises RuntimeError: either way
+        # corruption must surface as FrameError so the receiver re-dials
+        # instead of dying on an unexpected exception type
+        raise FrameError(f"corrupt compressed payload: {e}") from None
+    if len(payload) != raw_len:
+        raise FrameError(f"decompressed size {len(payload)} != header "
+                         f"raw_len {raw_len}")
+    try:
+        obj = pickle.loads(payload)
+    except Exception as e:
+        raise FrameError(f"corrupt pickle payload: {e}") from None
+    return obj, end
+
+
+# -- socket plumbing ----------------------------------------------------------
+
+def _read_exact(sock: socket.socket, n: int) -> bytes:
+    """Blocking read of exactly ``n`` bytes; EOFError on a closed peer.
+
+    Never over-reads, so ``select`` on the raw socket stays an accurate
+    "a frame (or part of one) is pending" signal — the property the
+    worker's cancellable delay wait relies on.
+    """
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(n - got)
+        if not chunk:
+            raise EOFError("connection closed by peer")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+class _SockConn:
+    """Duck-type of ``multiprocessing.Connection`` over a TCP socket.
+
+    Provides exactly the surface the process backend's worker loop uses
+    (``poll(timeout)`` / ``recv()`` / ``send(obj)`` / ``close()``), so
+    :class:`~repro.runtime.transport.process._WorkerLoop` runs unmodified
+    over it.  Single-reader/single-writer per side; byte counters feed the
+    transport's ``wire_stats``.
+    """
+
+    def __init__(self, sock: socket.socket, compress: str = "auto"):
+        self.sock = sock
+        self.compress = compress
+        self.frames_in = 0
+        self.frames_out = 0
+        self.raw_bytes_in = 0
+        self.wire_bytes_in = 0
+        self.raw_bytes_out = 0
+        self.wire_bytes_out = 0
+
+    def poll(self, timeout: float = 0.0) -> bool:
+        try:
+            ready, _, _ = select.select([self.sock], [], [], timeout)
+        except (OSError, ValueError):   # closed underneath us
+            return True                 # let recv() raise the real error
+        return bool(ready)
+
+    def recv(self):
+        header = _read_exact(self.sock, HEADER_SIZE)
+        magic, version, codec, _, raw_len, wire_len = _HEADER.unpack(header)
+        if magic != MAGIC or version != _VERSION:
+            raise FrameError(f"bad frame header from peer: magic={magic!r} "
+                             f"version={version}")
+        payload = _read_exact(self.sock, wire_len)
+        obj, _ = decode_frame(header + payload)
+        self.frames_in += 1
+        self.raw_bytes_in += raw_len
+        self.wire_bytes_in += wire_len + HEADER_SIZE
+        return obj
+
+    def send(self, obj) -> None:
+        frame = encode_frame(obj, self.compress)
+        self.sock.sendall(frame)
+        self.frames_out += 1
+        self.wire_bytes_out += len(frame)
+        self.raw_bytes_out += _HEADER.unpack(frame[:HEADER_SIZE])[4]
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:       # pragma: no cover - already torn down
+            pass
+
+
+# -- worker host (remote side) ------------------------------------------------
+
+class _SocketWorkerLoop(_WorkerLoop):
+    """The process backend's worker loop, pumping a socket connection.
+
+    Adds only the heartbeat reply; rounds, purge watermarks, and
+    drain-or-purge stops are handled by the base class, so the multi-host
+    path cannot diverge from the single-host one.
+    """
+
+    def _handle(self, msg: tuple) -> None:
+        if msg[0] == "ping":
+            self.conn.send(("pong",))
+        else:
+            super()._handle(msg)
+
+
+class _ConnResults:
+    """Adapter: the worker loop's result "queue" is the connection."""
+
+    __slots__ = ("_conn",)
+
+    def __init__(self, conn: _SockConn):
+        self._conn = conn
+
+    def put(self, item) -> None:
+        self._conn.send(item)
+
+
+def serve_worker_host(port: int = 0, host: str = "127.0.0.1", *,
+                      once: bool = False,
+                      announce: Callable[[str], None] = print) -> None:
+    """Run one worker host: listen, serve master sessions until killed.
+
+    A *session* starts with a ``("hello", worker_id, cfg, session_id,
+    watermark)`` frame and ends with a ``stop`` (orderly: final stats are
+    sent, state is discarded) or a dropped connection (crash/sever: state
+    is *kept* so the master can reconnect and resume — its hello carries
+    the same ``session_id`` and the authoritative purge watermark).  A
+    hello with a new ``session_id`` always starts fresh, so a master that
+    never said goodbye cannot leak its watermark or counters into the
+    next run.
+
+    ``port=0`` binds an ephemeral port; the chosen one is announced as
+    ``LISTENING <host> <port>`` (the line :class:`LocalCluster` parses).
+    ``once`` exits after the first orderly session — CI hygiene.
+    """
+    srv = socket.create_server((host, port))
+    srv.listen(1)
+    bound_port = srv.getsockname()[1]
+    announce(f"LISTENING {host} {bound_port}")
+
+    session_id = None          # the session a reconnect may resume
+    runner = None
+    watermark = -1
+
+    while True:
+        try:
+            raw_sock, _addr = srv.accept()
+        except (KeyboardInterrupt, OSError):
+            return
+        raw_sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        conn = _SockConn(raw_sock)
+        try:
+            hello = conn.recv()
+            if not (isinstance(hello, tuple) and hello[0] == "hello"):
+                raise FrameError(f"expected hello, got {hello!r}")
+            _, worker_id, cfg, sid, master_watermark = hello
+            conn.compress = cfg.compress
+            loop = _SocketWorkerLoop(worker_id, cfg, conn,
+                                     _ConnResults(conn))
+            if sid == session_id and runner is not None:
+                # same master reconnecting: keep its counters and
+                # watermark, pointing the kept runner's emit at the
+                # fresh connection
+                loop.runner = runner
+                runner._emit = loop._emit
+                loop.watermark = max(watermark, master_watermark)
+            else:
+                # a new master (or one that lost its old host state):
+                # the loop's own fresh runner, master's watermark only
+                loop.watermark = master_watermark
+            runner = loop.runner
+            session_id = sid
+            try:
+                loop.run()
+            finally:
+                watermark = loop.watermark
+            # run() returned: orderly stop — stats are already sent;
+            # discard session state so the next hello starts clean
+            session_id = None
+            runner = None
+            watermark = -1
+            if once:
+                return
+        except (EOFError, ConnectionError, FrameError, OSError):
+            # dropped/garbled connection: keep session state for a
+            # resuming master; anything queued died with the connection
+            # and the master's purge watermark will cover it
+            pass
+        except KeyboardInterrupt:
+            return
+        finally:
+            conn.close()
+
+
+# -- master side --------------------------------------------------------------
+
+class _WorkerLink:
+    """Master-side state for one remote worker: socket, receiver thread,
+    liveness, reconnect."""
+
+    def __init__(self, transport: "SocketTransport", worker_id: int,
+                 addr: str):
+        self.transport = transport
+        self.worker_id = worker_id
+        host, _, port = addr.rpartition(":")
+        self.host, self.port = host, int(port)
+        self.conn: Optional[_SockConn] = None
+        self.lock = threading.RLock()    # serializes send + reconnect
+        self.gen = 0                     # bumped on every (re)connect
+        self.last_seen = clock()
+        self.dead: Optional[str] = None  # reason, once declared dead
+        self.got_stats = threading.Event()
+        self._closed_conn_stats = np.zeros(6, dtype=np.int64)
+        self.receiver = threading.Thread(
+            target=self._receive, daemon=True,
+            name=f"runtime-socket-recv-{worker_id}")
+
+    # -- connection management ------------------------------------------------
+    def _dial(self, timeout: float) -> _SockConn:
+        deadline = clock() + timeout
+        last_err: Exception = ConnectionError("never attempted")
+        while clock() < deadline:
+            try:
+                sock = socket.create_connection(
+                    (self.host, self.port),
+                    timeout=max(0.1, deadline - clock()))
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                return _SockConn(sock, self.transport._cfg.compress)
+            except OSError as e:
+                last_err = e
+                time.sleep(0.05)
+        raise ConnectionError(
+            f"worker {self.worker_id} at {self.host}:{self.port} "
+            f"unreachable within {timeout}s: {last_err}")
+
+    def connect(self, timeout: float) -> None:
+        """Initial dial + hello (start path; raises on failure)."""
+        with self.lock:
+            self.conn = self._dial(timeout)
+            self._hello()
+            self.gen += 1
+            self.last_seen = clock()
+
+    def _hello(self) -> None:
+        t = self.transport
+        self.conn.send(("hello", self.worker_id, t._cfg, t._session,
+                        t._watermark))
+
+    def _reconnect_or_fail(self, why: str) -> bool:
+        """One bounded reconnect pass; returns True if the link is back.
+
+        Runs under ``lock``.  The re-sent hello carries the session id
+        and the current purge watermark, so a worker that kept state
+        resumes exactly, and one that lost it starts clean *with the
+        watermark already applied* — either way no purged round can
+        execute after the reconnect.
+        """
+        if self.dead or self.transport._shutting_down:
+            return False
+        old = self.conn
+        for _ in range(self.transport.reconnect_attempts):
+            try:
+                self.conn = self._dial(self.transport.reconnect_timeout)
+                self._hello()
+                self.gen += 1
+                self.last_seen = clock()
+                if old is not None and old is not self.conn:
+                    self._fold_stats(old)
+                    old.close()
+                return True
+            except (OSError, ConnectionError, EOFError):
+                time.sleep(self.transport.reconnect_backoff)
+        self.mark_dead(f"connection lost ({why}); reconnect failed after "
+                       f"{self.transport.reconnect_attempts} attempts")
+        return False
+
+    def mark_dead(self, reason: str) -> None:
+        with self.lock:
+            if self.dead is None:
+                self.dead = reason
+            if self.conn is not None:
+                self.conn.close()
+
+    def _fold_stats(self, conn: _SockConn) -> None:
+        """Accumulate a retiring connection's byte counters (reconnects
+        must not zero the run's wire totals)."""
+        self._closed_conn_stats += (
+            conn.frames_out, conn.raw_bytes_out, conn.wire_bytes_out,
+            conn.frames_in, conn.raw_bytes_in, conn.wire_bytes_in)
+
+    def stats_tuple(self) -> np.ndarray:
+        """(frames_out, raw_out, wire_out, frames_in, raw_in, wire_in)
+        over every connection this link has had."""
+        with self.lock:
+            total = self._closed_conn_stats.copy()
+            conn = self.conn
+            if conn is not None:
+                total += (conn.frames_out, conn.raw_bytes_out,
+                          conn.wire_bytes_out, conn.frames_in,
+                          conn.raw_bytes_in, conn.wire_bytes_in)
+        return total
+
+    # -- traffic --------------------------------------------------------------
+    def send(self, msg: tuple) -> bool:
+        """Send one frame; transparently reconnects once on a dropped
+        connection.  Returns False (dropping the message) only for a
+        dead link — the caller's next ``assert_alive`` reports it."""
+        with self.lock:
+            if self.dead is not None or self.conn is None:
+                return False
+            try:
+                self.conn.send(msg)
+                return True
+            except (OSError, ConnectionError) as e:
+                if self._reconnect_or_fail(f"send: {e}"):
+                    try:
+                        self.conn.send(msg)
+                        return True
+                    except (OSError, ConnectionError) as e2:
+                        self.mark_dead(f"send failed twice: {e2}")
+            return False
+
+    def _receive(self) -> None:
+        """Receiver loop: results/stats/pongs, EOF -> reconnect-or-fail."""
+        t = self.transport
+        while True:
+            with self.lock:
+                conn, gen = self.conn, self.gen
+                if self.dead is not None:
+                    return
+            if conn is None:
+                return
+            try:
+                msg = conn.recv()
+            except FrameError as e:
+                # garbled stream: cannot resynchronize mid-connection —
+                # drop it and re-dial for a clean frame boundary
+                with self.lock:
+                    if t._shutting_down or self.dead is not None:
+                        return
+                    if self.gen == gen and not self._reconnect_or_fail(
+                            f"garbled frame: {e}"):
+                        return
+                continue
+            except (EOFError, OSError, ConnectionError) as e:
+                with self.lock:
+                    if t._shutting_down or self.dead is not None:
+                        return
+                    if self.gen != gen:   # send path already reconnected
+                        continue
+                    if not self._reconnect_or_fail(f"recv: {e}"):
+                        return
+                continue
+            self.last_seen = clock()
+            kind = msg[0]
+            if kind == "result":
+                _, wire, busy = msg
+                result = TaskResult.from_wire(wire)
+                with t._stats_lock:
+                    t._busy[result.worker_id] = busy
+                t._sink(result)
+            elif kind == "stats":
+                _, worker_id, busy, done, purged = msg
+                with t._stats_lock:
+                    t._busy[worker_id] = busy
+                    t._done += done
+                    t._purged += purged
+                self.got_stats.set()
+            elif kind == "pong":
+                pass
+            # unknown frames are ignored: forward compatibility
+
+
+class SocketTransport(WorkerTransport):
+    """``cfg.num_workers`` remote worker hosts over TCP (one per
+    ``cfg.hosts`` entry), length-prefixed compressed frames, heartbeat
+    liveness, reconnect-or-fail."""
+
+    name = "socket"
+
+    def __init__(self, cfg: RuntimeConfig,
+                 sink: Callable[[TaskResult], None],
+                 rng: Optional[np.random.Generator] = None, *,
+                 connect_timeout: float = 30.0,
+                 heartbeat_interval: float = 1.0,
+                 heartbeat_timeout: float = 15.0,
+                 reconnect_attempts: int = 2,
+                 reconnect_timeout: float = 1.0,
+                 reconnect_backoff: float = 0.05):
+        super().__init__(cfg, sink, rng)
+        if cfg.compress == "lz4" and not have_lz4():
+            raise ValueError("compress='lz4' but lz4 is not installed; "
+                             "use 'zlib' or 'auto'")
+        self.connect_timeout = connect_timeout
+        self.heartbeat_interval = heartbeat_interval
+        self.heartbeat_timeout = heartbeat_timeout
+        self.reconnect_attempts = reconnect_attempts
+        self.reconnect_timeout = reconnect_timeout
+        self.reconnect_backoff = reconnect_backoff
+        self._session = uuid.uuid4().hex
+        self._watermark = -1          # highest purged dispatch seq
+        self._busy = np.zeros(cfg.num_workers)
+        self._done = 0
+        self._purged = 0
+        self._stats_lock = threading.Lock()
+        self._started = False
+        self._shutting_down = False
+        self._stop_heartbeat = threading.Event()
+        self._heartbeat = threading.Thread(
+            target=self._heartbeat_loop, daemon=True,
+            name="runtime-socket-heartbeat")
+        self.links = [_WorkerLink(self, p, addr)
+                      for p, addr in enumerate(cfg.hosts)]
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> None:
+        for link in self.links:
+            link.connect(self.connect_timeout)
+        for link in self.links:
+            link.receiver.start()
+        self._heartbeat.start()
+        self._started = True
+
+    def shutdown(self, timeout: float = 10.0, *, drain: bool = False
+                 ) -> None:
+        self._shutting_down = True
+        self._stop_heartbeat.set()
+        if not self._started:
+            for link in self.links:
+                if link.conn is not None:
+                    link.conn.close()
+            return
+        live = [ln for ln in self.links if ln.dead is None]
+        for link in live:
+            link.send(("stop", drain))
+        deadline = clock() + timeout
+        missing = []
+        for link in live:
+            if not link.got_stats.wait(max(0.0, deadline - clock())):
+                missing.append(f"worker-{link.worker_id}@"
+                               f"{link.host}:{link.port}")
+        for link in self.links:
+            link.mark_dead("shutdown")    # closes conns -> receivers exit
+        self._heartbeat.join(timeout=timeout)
+        leaked = []
+        for link in self.links:
+            if link.receiver.is_alive():
+                link.receiver.join(timeout=timeout)
+                if link.receiver.is_alive():
+                    leaked.append(link.receiver.name)
+        if leaked:
+            raise RuntimeError(
+                f"socket transport receiver thread(s) failed to stop "
+                f"within {timeout}s: {leaked}")
+        if missing:
+            raise RuntimeError(
+                f"worker host(s) never returned final stats within "
+                f"{timeout}s: {missing}")
+
+    # -- liveness -------------------------------------------------------------
+    def _heartbeat_loop(self) -> None:
+        while not self._stop_heartbeat.wait(self.heartbeat_interval):
+            now = clock()
+            for link in self.links:
+                if link.dead is not None:
+                    continue
+                if now - link.last_seen > self.heartbeat_timeout:
+                    link.mark_dead(
+                        f"no frame for {now - link.last_seen:.1f}s "
+                        f"(heartbeat timeout {self.heartbeat_timeout}s)")
+                    continue
+                link.send(("ping",))
+
+    def _dead_workers(self) -> list[str]:
+        if not self._started or self._shutting_down:
+            return []
+        return [f"socket-worker-{ln.worker_id}@{ln.host}:{ln.port} "
+                f"({ln.dead})" for ln in self.links if ln.dead is not None]
+
+    # -- dispatch / purge -----------------------------------------------------
+    def _send_slice(self, worker_id: int, ctx: RoundContext, first_task: int,
+                    x: np.ndarray, y: np.ndarray,
+                    delays: np.ndarray) -> None:
+        wire = WireBatch(seq=ctx.seq, job_id=ctx.job_id,
+                         round_idx=ctx.round_idx, first_task_id=first_task,
+                         x=np.ascontiguousarray(x),
+                         y=np.ascontiguousarray(y), delays=delays)
+        # a dead worker's slice is dropped, not raised: redundancy may
+        # still fuse the round, and assert_alive() reports the death at
+        # the master's next liveness check either way
+        self.links[worker_id].send(("round", wire))
+
+    def purge_round(self, ctx: RoundContext) -> None:
+        ctx.purge()               # master side: fusion drops stale results
+        if ctx.seq < 0:
+            return                # never dispatched
+        self._watermark = max(self._watermark, ctx.seq)
+        for link in self.links:
+            link.send(("purge", ctx.seq))
+
+    # -- occupancy / outcome counters ----------------------------------------
+    @property
+    def busy_seconds(self) -> np.ndarray:
+        """Live values ride each result envelope (lagging a worker's
+        current delay wait by one task); final stats make them exact."""
+        with self._stats_lock:
+            return self._busy.copy()
+
+    @property
+    def tasks_done(self) -> int:
+        """Exact after shutdown (final stats); 0 while running."""
+        with self._stats_lock:
+            return self._done
+
+    @property
+    def tasks_purged(self) -> int:
+        """Exact after shutdown (final stats); 0 while running."""
+        with self._stats_lock:
+            return self._purged
+
+    @property
+    def wire_stats(self) -> dict:
+        """Aggregate frame/byte counters over all links.
+
+        ``result_raw_bytes`` / ``result_wire_bytes`` are the result-path
+        totals (worker -> master, pickles vs on-the-wire after
+        compression); ``compression_ratio`` is raw/wire on that path
+        (1.0 = incompressible or compression off).
+        """
+        total = np.zeros(6, dtype=np.int64)
+        for link in self.links:
+            total += link.stats_tuple()
+        frames_out, raw_out, bytes_out, frames_in, raw_in, wire_in = (
+            int(x) for x in total)
+        return {
+            "frames_sent": frames_out,
+            "dispatch_raw_bytes": raw_out,
+            "dispatch_wire_bytes": bytes_out,
+            "frames_received": frames_in,
+            "result_raw_bytes": raw_in,
+            "result_wire_bytes": wire_in,
+            "compression_ratio": (raw_in / wire_in) if wire_in else 1.0,
+            "compress": self._cfg.compress,
+            "lz4_available": have_lz4(),
+        }
+
+    # -- test hook ------------------------------------------------------------
+    def sever_for_test(self, worker_id: int) -> None:
+        """Forcibly drop one link's TCP connection (fault injection).
+
+        Simulates a network sever: the socket is shut down under the
+        link, so the next send/recv on it fails and the
+        reconnect-or-fail path runs.  Test-only by contract.
+        """
+        conn = self.links[worker_id].conn
+        if conn is not None:
+            try:
+                conn.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:       # pragma: no cover - already down
+                pass
+
+
+# -- localhost test/bench harness ---------------------------------------------
+
+class LocalCluster:
+    """Spawn ``n`` worker hosts on localhost ports (subprocesses).
+
+    The conformance suite's stand-in for a real multi-host cluster: each
+    worker is a genuine OS process running ``runctl serve-worker`` (via
+    ``python -m repro.launch.worker_host``), reachable only over TCP —
+    and killable with SIGKILL for fault-injection tests.
+
+    Use as a context manager::
+
+        with LocalCluster(3) as cluster:
+            cfg = RuntimeConfig(mu=(..,)*3, backend="socket",
+                                hosts=cluster.hosts)
+            ...
+
+    Hosts serve sessions in a loop, so one cluster backs any number of
+    sequential runs.
+    """
+
+    def __init__(self, num_workers: int, *, host: str = "127.0.0.1",
+                 spawn_timeout: float = 60.0):
+        self.host = host
+        self.processes: list[subprocess.Popen] = []
+        self.hosts: tuple[str, ...] = ()
+        src_root = pathlib.Path(__file__).resolve().parents[3]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (str(src_root) + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        ports = []
+        try:
+            for _ in range(num_workers):
+                proc = subprocess.Popen(
+                    [sys.executable, "-m", "repro.launch.worker_host",
+                     "--host", host, "--port", "0"],
+                    stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+                    env=env, text=True)
+                self.processes.append(proc)
+            deadline = clock() + spawn_timeout
+            for proc in self.processes:
+                # select before readline: a wedged host that never prints
+                # its announce line must trip spawn_timeout, not block the
+                # constructor forever (the announce is a single flushed
+                # line, so once readable it arrives whole)
+                ready, _, _ = select.select(
+                    [proc.stdout], [], [], max(0.0, deadline - clock()))
+                if not ready:
+                    raise RuntimeError(
+                        f"worker host did not announce within "
+                        f"{spawn_timeout}s (exit code {proc.poll()})")
+                line = proc.stdout.readline()
+                if not line.startswith("LISTENING"):
+                    raise RuntimeError(
+                        f"worker host failed to start (said {line!r}, "
+                        f"exit code {proc.poll()})")
+                ports.append(int(line.split()[2]))
+            self.hosts = tuple(f"{host}:{p}" for p in ports)
+        except BaseException:
+            self.close()
+            raise
+
+    def kill(self, index: int) -> None:
+        """SIGKILL one worker host (the dead-node fault injection)."""
+        self.processes[index].kill()
+        self.processes[index].wait(timeout=10.0)
+
+    def close(self) -> None:
+        for proc in self.processes:
+            if proc.poll() is None:
+                proc.terminate()
+        for proc in self.processes:
+            try:
+                proc.wait(timeout=10.0)
+            except subprocess.TimeoutExpired:   # pragma: no cover
+                proc.kill()
+                proc.wait(timeout=10.0)
+            if proc.stdout is not None:
+                proc.stdout.close()
+
+    def __enter__(self) -> "LocalCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -140,7 +140,11 @@ class TestHloCosts:
         x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
         ws = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
         ca = jax.jit(scanned).lower(x, ws).compile().cost_analysis()
-        assert ca["flops"] == pytest.approx(2 * 128**3, rel=1e-6)
+        if isinstance(ca, (list, tuple)):   # older jax wraps per-device
+            ca = ca[0]
+        # one body's worth of dot flops (+ a few scalar loop-carry adds),
+        # nowhere near the 6x a trip-count-aware count reports
+        assert ca["flops"] == pytest.approx(2 * 128**3, rel=1e-4)
 
     def test_collective_ring_model(self):
         txt = ('ENTRY %e (p: f32[16,16]) -> f32[16,16] {\n'

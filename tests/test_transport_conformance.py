@@ -3,14 +3,22 @@
 The runtime's correctness claims (§IV semantics, simulator agreement,
 adaptive-ω behavior) must hold over *any* transport, not just the thread
 pool they were first built on.  This file parametrizes the load-bearing
-runtime tests over ``backend in {thread, process}`` — the ``jax`` backend
-is smoke-only (CPU has one device; its transport loop is the thread
-backend's) — plus transport-level contract tests: wire-form round trips,
-purge watermarks, and leak-free drain-or-purge shutdown.
+runtime tests over ``backend in {thread, process, socket}`` — the ``jax``
+backend is smoke-only (CPU has one device; its transport loop is the
+thread backend's) — plus transport-level contract tests: wire-form round
+trips, purge watermarks, and leak-free drain-or-purge shutdown.
 
-End-to-end cases run real workers (threads or OS processes) with real
-coded matmuls; keep delay scales well above per-round overhead so the
-measured statistics are about the system, not the container's timer.
+The ``socket`` backend runs against a session-scoped
+:class:`~repro.runtime.transport.socket_host.LocalCluster` of real worker
+host processes on localhost ports — purges, liveness, and shutdown all
+cross a TCP connection.  Its *fault-injection* cases (SIGKILL a host,
+sever a connection mid-round) spawn private clusters so they cannot
+poison the shared one.
+
+End-to-end cases run real workers (threads, OS processes, or TCP worker
+hosts) with real coded matmuls; keep delay scales well above per-round
+overhead so the measured statistics are about the system, not the
+container's timer.
 """
 
 import dataclasses
@@ -24,9 +32,32 @@ import pytest
 from repro.core import simulator
 from repro.runtime import (BACKENDS, FusionNode, RoundContext, RuntimeConfig,
                            TaskResult, WireBatch, make_transport, run_jobs)
+from repro.runtime.transport.socket_host import LocalCluster
 
 MU3 = (400.0, 650.0, 380.0)
-BACKENDS_FULL = ("thread", "process")
+BACKENDS_FULL = ("thread", "process", "socket")
+
+
+@pytest.fixture(scope="session")
+def socket_cluster():
+    """One LocalCluster for every socket-parametrized case: worker hosts
+    serve sessions in a loop, so sequential runs just reuse them."""
+    with LocalCluster(len(MU3)) as cluster:
+        yield cluster
+
+
+@pytest.fixture
+def bcfg(request):
+    """Config factory that knows how to target the shared socket cluster."""
+
+    def make(backend, **kw):
+        kw.setdefault("mu", MU3)
+        if backend == "socket":
+            kw.setdefault(
+                "hosts", request.getfixturevalue("socket_cluster").hosts)
+        return RuntimeConfig(backend=backend, **kw)
+
+    return make
 
 
 def _cfg(**kw):
@@ -46,7 +77,7 @@ def _runtime_worker_processes() -> list[str]:
 
 class TestRegistry:
     def test_registry_names_match_config_surface(self):
-        assert set(BACKENDS) == {"thread", "process", "jax"}
+        assert set(BACKENDS) == {"thread", "process", "jax", "socket"}
         for name, cls in BACKENDS.items():
             assert cls.name == name
 
@@ -65,6 +96,21 @@ class TestRegistry:
         with pytest.raises(ValueError, match="use_jax_devices"):
             _cfg(backend="process", use_jax_devices=True)
         _cfg(backend="jax", use_jax_devices=True)   # redundant but fine
+
+    def test_socket_backend_config_validation(self):
+        """hosts are required (one per worker), well-formed, and rejected
+        with any other backend rather than silently ignored."""
+        with pytest.raises(ValueError, match="host:port per worker"):
+            _cfg(backend="socket")
+        with pytest.raises(ValueError, match="host:port per worker"):
+            _cfg(backend="socket", hosts=("127.0.0.1:1",))   # 1 for 3
+        with pytest.raises(ValueError, match="not of the form"):
+            _cfg(backend="socket", hosts=("a:1", "b:2", "noport"))
+        with pytest.raises(ValueError, match="only meaningful"):
+            _cfg(backend="thread", hosts=("127.0.0.1:1",) * 3)
+        with pytest.raises(ValueError, match="compress"):
+            _cfg(compress="gzip")
+        _cfg(backend="socket", hosts=("a:1", "b:2", "c:3"))   # valid
 
 
 class TestWireForms:
@@ -119,11 +165,11 @@ class TestTransportContract:
         finally:
             transport.shutdown()
 
-    def test_round_trip_fuses_and_decodes(self, backend):
-        self._round_trip(backend, _cfg(backend=backend, straggler="none"))
+    def test_round_trip_fuses_and_decodes(self, backend, bcfg):
+        self._round_trip(backend, bcfg(backend, straggler="none"))
 
-    def test_seq_stamped_monotonic(self, backend):
-        cfg = _cfg(backend=backend, straggler="none")
+    def test_seq_stamped_monotonic(self, backend, bcfg):
+        cfg = bcfg(backend, straggler="none")
         fusion = FusionNode()
         transport = make_transport(cfg, sink=fusion.post)
         transport.start()
@@ -141,10 +187,10 @@ class TestTransportContract:
         finally:
             transport.shutdown()
 
-    def test_purge_reclaims_delayed_workers_immediately(self, backend):
+    def test_purge_reclaims_delayed_workers_immediately(self, backend, bcfg):
         """A purge must interrupt a multi-second injected delay at once:
         the next round's fuse proves the workers came back."""
-        cfg = _cfg(backend=backend, straggler="stall", stall_workers=(0, 1, 2),
+        cfg = bcfg(backend, straggler="stall", stall_workers=(0, 1, 2),
                    stall_seconds=30.0)
         fusion = FusionNode()
         transport = make_transport(cfg, sink=fusion.post)
@@ -181,19 +227,19 @@ class TestTransportContract:
         finally:
             transport.shutdown()
 
-    def test_shutdown_leaks_nothing(self, backend):
-        cfg = _cfg(backend=backend, straggler="none")
+    def test_shutdown_leaks_nothing(self, backend, bcfg):
+        cfg = bcfg(backend, straggler="none")
         transport = make_transport(cfg, sink=lambda r: None)
         transport.start()
         transport.shutdown()
         assert not _runtime_worker_threads()
         assert not _runtime_worker_processes()
 
-    def test_purge_mode_shutdown_reclaims_inflight_round(self, backend):
+    def test_purge_mode_shutdown_reclaims_inflight_round(self, backend, bcfg):
         """The ISSUE bugfix: shutting down with an un-purged, delay-bound
         round in flight must neither hang nor leak — queued tasks are
         deterministically counted as purged."""
-        cfg = _cfg(backend=backend, straggler="stall", stall_workers=(0, 1, 2),
+        cfg = bcfg(backend, straggler="stall", stall_workers=(0, 1, 2),
                    stall_seconds=30.0)
         fusion = FusionNode()
         transport = make_transport(cfg, sink=fusion.post)
@@ -217,8 +263,8 @@ class TestTransportContract:
 class TestEndToEndConformance:
     """The load-bearing runtime tests, identical over every backend."""
 
-    def test_completes_and_decode_verifies(self, backend):
-        cfg = _cfg(backend=backend, arrival_rate=100.0, complexity=0.2,
+    def test_completes_and_decode_verifies(self, backend, bcfg):
+        cfg = bcfg(backend, arrival_rate=100.0, complexity=0.2,
                    straggler="none", seed=0)
         res, futures = run_jobs(cfg, num_jobs=6, K=64, M=8, N=8, verify=True)
         assert res.backend == backend
@@ -229,7 +275,7 @@ class TestEndToEndConformance:
         assert not _runtime_worker_threads()
         assert not _runtime_worker_processes()
 
-    def test_deadline_releases_verified_lower_resolution(self, backend):
+    def test_deadline_releases_verified_lower_resolution(self, backend, bcfg):
         """The §IV acceptance scenario per backend: a straggler plus a
         deadline the final resolution misses still releases a correct
         lower resolution, MSB-first delays ordered.
@@ -238,7 +284,7 @@ class TestEndToEndConformance:
         wall-clock deadline on a loaded container can cost an occasional
         res-0 — the claim under test is the qualitative §IV gap between
         res-0 and the final resolution, not a hard-real-time guarantee."""
-        cfg = _cfg(backend=backend, arrival_rate=14.0, complexity=8.0,
+        cfg = bcfg(backend, arrival_rate=14.0, complexity=8.0,
                    deadline=0.030, straggler="stall", stall_workers=(2,),
                    stall_seconds=2.0, seed=0)
         res, _ = run_jobs(cfg, num_jobs=20, K=64, M=8, N=8, verify=True)
@@ -251,7 +297,7 @@ class TestEndToEndConformance:
         assert np.nanmax(res.verify_errors) < 1e-9
         assert np.all(np.diff(res.mean_delay()) > 0)
 
-    def test_runtime_agrees_with_simulator(self, backend):
+    def test_runtime_agrees_with_simulator(self, backend, bcfg):
         """Measured mean res-0 delay under exp stragglers agrees with
         simulate() on the same configuration — over any transport.
 
@@ -263,7 +309,7 @@ class TestEndToEndConformance:
         models, not about M/G/1 sensitivity to the container's core
         count.  At this scale both backends sit within a few percent of
         the simulator (dev container: thread ~0.97x, process ~1.02x)."""
-        cfg = _cfg(backend=backend, arrival_rate=0.8, complexity=60.0,
+        cfg = bcfg(backend, arrival_rate=0.8, complexity=60.0,
                    straggler="exp", seed=2)
         res, _ = run_jobs(cfg, num_jobs=8, K=64, M=8, N=8)
         sim = simulator.simulate(cfg.to_system_config(), 4000, layered=True,
@@ -272,11 +318,11 @@ class TestEndToEndConformance:
         assert md[0] == pytest.approx(sd[0], rel=0.30)
         assert np.all(np.diff(md) > 0) and np.all(np.diff(sd) > 0)
 
-    def test_adaptive_omega_signals_travel(self, backend):
+    def test_adaptive_omega_signals_travel(self, backend, bcfg):
         """The ROADMAP transport-agnostic claim: RoundObservation signals
         (wait/stale/margin/utilization) drive the same ω retune loop over
         any backend — the regime-shift scenario recovers res-0 success."""
-        base = _cfg(backend=backend, arrival_rate=14.0, omega=1.0,
+        base = bcfg(backend, arrival_rate=14.0, omega=1.0,
                     complexity=8.0, deadline=0.04, straggler="shift",
                     stall_workers=(2,), shift_at=0.6, stall_seconds=1.0,
                     adapt="fixed", seed=0)
@@ -311,6 +357,97 @@ class TestProcessLiveness:
         finally:
             transport.shutdown()
         assert not _runtime_worker_processes()
+
+
+class TestSocketFaults:
+    """Fault injection against the socket backend: a dead host fails the
+    run promptly, a severed connection recovers, and in neither case may
+    fusion hang.  Each case owns a private LocalCluster — the injected
+    faults would poison the session-shared one."""
+
+    def _stalled_round(self, cluster):
+        """A transport with one all-workers-stalled round in flight."""
+        cfg = _cfg(backend="socket", hosts=cluster.hosts, straggler="stall",
+                   stall_workers=(0, 1, 2), stall_seconds=30.0)
+        fusion = FusionNode()
+        transport = make_transport(cfg, sink=fusion.post)
+        transport.start()
+        code = cfg.code()
+        rng = np.random.default_rng(1)
+        a = rng.integers(0, 9, size=(16, 4)).astype(np.float64)
+        b = rng.integers(0, 9, size=(16, 4)).astype(np.float64)
+        X, Y = code.encode(a, b)
+        ctx = RoundContext(0, 0)
+        rf = fusion.begin_round(ctx, code.k)
+        transport.submit_round(ctx, np.asarray(X), np.asarray(Y),
+                               cfg.load_split())
+        time.sleep(0.1)
+        return transport, fusion, code, (a, b, X, Y), ctx, rf
+
+    def test_sigkill_worker_host_fails_run_promptly(self):
+        """SIGKILL a worker host mid-round: assert_alive must raise
+        within seconds (EOF -> reconnect-or-fail), and the in-flight
+        round must not hang fusion."""
+        with LocalCluster(len(MU3)) as cluster:
+            transport, fusion, code, _, ctx, rf = self._stalled_round(
+                cluster)
+            try:
+                transport.assert_alive()          # healthy: no-op
+                t0 = time.monotonic()
+                cluster.kill(0)                   # SIGKILL, no goodbye
+                deadline = t0 + 10.0
+                while time.monotonic() < deadline:
+                    try:
+                        transport.assert_alive()
+                    except RuntimeError as e:
+                        assert "died" in str(e)
+                        break
+                    time.sleep(0.05)
+                else:
+                    pytest.fail("dead host never detected")
+                detect = time.monotonic() - t0
+                assert detect < 8.0, f"detection took {detect:.1f}s"
+                assert not rf.wait(timeout=0.0)   # round is dead, not hung
+                transport.purge_round(ctx)
+            finally:
+                # shutdown with a dead member must neither hang nor leak;
+                # it may report the host that cannot answer
+                try:
+                    transport.shutdown(timeout=8.0)
+                except RuntimeError as e:
+                    assert "worker" in str(e)
+            assert not _runtime_worker_threads()
+
+    def test_severed_connection_purge_watermark_clears_round(self):
+        """Sever connections during result return: the transport
+        reconnects, the re-sent hello carries the purge watermark, and
+        the next round fuses fast — the stalled round never zombies."""
+        with LocalCluster(len(MU3)) as cluster:
+            transport, fusion, code, (a, b, X, Y), ctx0, rf0 = \
+                self._stalled_round(cluster)
+            try:
+                transport.sever_for_test(0)
+                transport.sever_for_test(1)
+                t0 = time.monotonic()
+                transport.purge_round(ctx0)       # watermark rides hello
+                assert not rf0.wait(timeout=0.0)
+                ctx1 = RoundContext(0, 1)
+                rf1 = fusion.begin_round(ctx1, code.k)
+                kappa = transport._cfg.load_split()
+                zero = [np.zeros(int(k)) for k in kappa]
+                transport.submit_round(ctx1, np.asarray(X), np.asarray(Y),
+                                       kappa, delays=zero)
+                assert rf1.wait(timeout=10.0), \
+                    "round after sever never fused"
+                recover = time.monotonic() - t0
+                assert recover < 5.0, f"recovery took {recover:.2f}s"
+                transport.purge_round(ctx1)
+                np.testing.assert_allclose(rf1.decode(code), a.T @ b,
+                                           rtol=1e-9, atol=1e-6)
+                transport.assert_alive()          # reconnected, not dead
+            finally:
+                transport.shutdown(timeout=8.0)
+            assert not _runtime_worker_threads()
 
 
 class TestJaxBackendSmoke:
