@@ -94,6 +94,49 @@ def run_scenario(spec: dict, *, sim_jobs: int) -> dict:
     }
 
 
+def run_tracing_overhead(jobs: int = 24, reps: int = 3) -> dict:
+    """Tracing cost row: the same no-straggler workload, traced vs not.
+
+    No injected delays and a saturating arrival rate, so wall time is
+    nearly all per-round engine overhead — the worst case for tracing,
+    whose cost is per event, not per second of injected delay.  Each
+    variant takes the min wall over ``reps`` runs (noise floor), and the
+    row reports per-round microseconds for both plus the delta the CI
+    gate bounds (disabled: within noise of the pre-telemetry engine;
+    enabled: < 50 us/round).
+    """
+    walls = {}
+    rounds = events = 0
+    for trace in (False, True):
+        cfg = RuntimeConfig(mu=MU, arrival_rate=500.0, complexity=1.0,
+                            straggler="none", trace=trace, seed=3)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            result, _ = run_jobs(cfg, jobs, K=64, M=8, N=8, verify=False)
+            best = min(best, time.perf_counter() - t0)
+        walls[trace] = best
+        rounds = result.stage_rounds
+        if trace:
+            events = len(result.trace_events or ())
+            assert result.trace_dropped == 0
+    per_round = {t: walls[t] / rounds * 1e6 for t in walls}
+    delta = per_round[True] - per_round[False]
+    print(f"\n== tracing overhead: {jobs} jobs x {reps} reps, "
+          f"{rounds} rounds/run ==")
+    print(f"trace off: {per_round[False]:8.1f} us/round")
+    print(f"trace on:  {per_round[True]:8.1f} us/round  "
+          f"({events} events/run)")
+    print(f"delta:     {delta:+8.1f} us/round")
+    return {
+        "jobs": jobs, "reps": reps, "rounds": rounds,
+        "events_per_run": events,
+        "per_round_us_disabled": round(per_round[False], 2),
+        "per_round_us_enabled": round(per_round[True], 2),
+        "overhead_us_per_round": round(delta, 2),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--jobs", type=int, default=200,
@@ -104,7 +147,8 @@ def main(argv=None) -> int:
 
     report = {"bench": "runtime", "jobs_per_scenario": args.jobs,
               "scenarios": [run_scenario(s, sim_jobs=args.sim_jobs)
-                            for s in scenarios(args.jobs)]}
+                            for s in scenarios(args.jobs)],
+              "tracing_overhead": run_tracing_overhead()}
     path = pathlib.Path(args.out)
     path.write_text(json.dumps(report, indent=2))
     print(f"\nwrote {path}")

@@ -55,6 +55,32 @@ def compare(baseline: dict, new: dict, max_regress: float) -> list[str]:
     return failures
 
 
+def check_tracing_overhead(new: dict, max_overhead_us: float) -> list[str]:
+    """Gate the bench's tracing-overhead row.
+
+    Enabled tracing must stay under ``max_overhead_us`` per round;
+    disabled tracing has no separate budget here because the disabled
+    path *is* the engine the three scenario gates above already bound —
+    any disabled-path cost shows up as a res-0 regression.  Old artifacts
+    without the section are skipped with a note, not failed.
+    """
+    row = new.get("tracing_overhead")
+    if row is None:
+        print("[check] tracing_overhead: section absent (old bench "
+              "artifact), skipping")
+        return []
+    delta = float(row["overhead_us_per_round"])
+    status = "OK" if delta <= max_overhead_us else "REGRESSED"
+    print(f"[check] tracing_overhead: disabled "
+          f"{row['per_round_us_disabled']:.1f} us/round, enabled "
+          f"{row['per_round_us_enabled']:.1f} us/round, delta "
+          f"{delta:+.1f} us/round (budget {max_overhead_us:.0f})  {status}")
+    if delta > max_overhead_us:
+        return [f"tracing overhead {delta:+.1f} us/round exceeds "
+                f"{max_overhead_us:.0f} us/round budget"]
+    return []
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--new", default="BENCH_runtime.json",
@@ -62,11 +88,15 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=str(BASELINE))
     ap.add_argument("--max-regress", type=float, default=0.25,
                     help="allowed fractional regression (0.25 = +25%%)")
+    ap.add_argument("--max-trace-overhead-us", type=float, default=50.0,
+                    help="budget for enabled-tracing cost per round "
+                         "(microseconds)")
     args = ap.parse_args(argv)
 
     baseline = json.loads(pathlib.Path(args.baseline).read_text())
     new = json.loads(pathlib.Path(args.new).read_text())
     failures = compare(baseline, new, args.max_regress)
+    failures += check_tracing_overhead(new, args.max_trace_overhead_us)
     if failures:
         print("[check] FAIL:\n  " + "\n  ".join(failures), file=sys.stderr)
         return 1

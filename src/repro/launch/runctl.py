@@ -20,6 +20,11 @@ Examples::
     PYTHONPATH=src python -m repro.launch.runctl --jobs 100 \
         --backend socket --hosts hostA:7001,hostB:7001,hostC:7001 \
         --mu 400,650,380
+
+    # traced run: Perfetto-loadable timeline of the whole pipeline,
+    # remote worker spans clock-aligned onto the master timebase
+    PYTHONPATH=src python -m repro.launch.runctl --jobs 20 \
+        --backend socket --local-cluster --trace out.json --timeline
 """
 
 from __future__ import annotations
@@ -47,7 +52,16 @@ def _ints(text: str) -> tuple[int, ...]:
     return tuple(int(x) for x in text.split(",") if x)
 
 
-def build_config(args: argparse.Namespace) -> RuntimeConfig:
+def _wants_trace(args: argparse.Namespace) -> bool:
+    """Any trace-output flag turns structured tracing on for the run."""
+    return bool(getattr(args, "trace", None)
+                or getattr(args, "trace_jsonl", None)
+                or getattr(args, "timeline", False)
+                or getattr(args, "metrics_out", None))
+
+
+def build_config(args: argparse.Namespace,
+                 hosts: tuple[str, ...] | None = None) -> RuntimeConfig:
     return RuntimeConfig(
         mu=_floats(args.mu), arrival_rate=args.arrival_rate,
         n1=args.n1, n2=args.n2, omega=args.omega, m=args.planes, d=args.d,
@@ -60,8 +74,9 @@ def build_config(args: argparse.Namespace) -> RuntimeConfig:
         adapt=args.adapt, omega_min=args.omega_min,
         omega_max=args.omega_max, backend=args.backend,
         use_jax_devices=args.jax_devices,
-        hosts=tuple(h for h in args.hosts.split(",") if h),
-        compress=args.compress, seed=args.seed)
+        hosts=(hosts if hosts is not None
+               else tuple(h for h in args.hosts.split(",") if h)),
+        compress=args.compress, trace=_wants_trace(args), seed=args.seed)
 
 
 def summarize(cfg: RuntimeConfig, result) -> dict:
@@ -85,6 +100,9 @@ def summarize(cfg: RuntimeConfig, result) -> dict:
         "worker_utilization": [round(float(u), 4)
                                for u in result.utilization],
         "stale_results": int(result.stale_results),
+        "tasks_done": int(result.tasks_done),
+        "tasks_purged": int(result.tasks_purged),
+        "clock_sync": result.clock_sync,
         "wall_elapsed": float(result.wall_elapsed),
         "stage_seconds": {k: float(v)
                           for k, v in (result.stage_seconds or {}).items()},
@@ -180,6 +198,24 @@ def main(argv=None) -> int:
                          "same configuration")
     ap.add_argument("--sim-jobs", type=int, default=4000)
     ap.add_argument("--json", default=None, help="write summary JSON here")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a structured trace and write it here as "
+                         "Chrome trace-event JSON (load in Perfetto / "
+                         "chrome://tracing); remote worker spans are "
+                         "clock-aligned onto the master timebase")
+    ap.add_argument("--trace-jsonl", default=None, metavar="PATH",
+                    help="also write the raw trace as one JSON event per "
+                         "line (for ad-hoc analysis)")
+    ap.add_argument("--timeline", action="store_true",
+                    help="print an ASCII Gantt of the traced run (implies "
+                         "tracing, like --trace)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump a Prometheus text-format snapshot of the "
+                         "run's counters here (implies tracing)")
+    ap.add_argument("--local-cluster", action="store_true",
+                    help="socket backend: spawn one worker-host process per "
+                         "--mu entry on localhost instead of naming "
+                         "--hosts (smoke runs and demos)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.straggler == "shift" and args.shift_at is None:
@@ -192,11 +228,31 @@ def main(argv=None) -> int:
     if args.jax_devices and args.backend not in ("thread", "jax"):
         ap.error(f"--jax-devices is a legacy alias for --backend jax and "
                  f"conflicts with --backend {args.backend}")
-    if args.backend == "socket" and not args.hosts:
+    if args.local_cluster and args.backend != "socket":
+        ap.error("--local-cluster spawns socket worker hosts; it needs "
+                 f"--backend socket, not {args.backend!r}")
+    if args.local_cluster and args.hosts:
+        ap.error("--local-cluster and --hosts are exclusive: the former "
+                 "spawns its own localhost worker hosts")
+    if args.backend == "socket" and not (args.hosts or args.local_cluster):
         ap.error("--backend socket needs --hosts host:port,... (one per "
-                 "--mu entry; start each with 'runctl serve-worker')")
+                 "--mu entry; start each with 'runctl serve-worker') or "
+                 "--local-cluster")
 
-    cfg = build_config(args)
+    cluster = None
+    if args.local_cluster:
+        from repro.runtime.transport.socket_host import LocalCluster
+        cluster = LocalCluster(len(_floats(args.mu)))
+    try:
+        cfg = build_config(
+            args, hosts=cluster.hosts if cluster is not None else None)
+        return _run(args, cfg)
+    finally:
+        if cluster is not None:
+            cluster.close()
+
+
+def _run(args: argparse.Namespace, cfg: RuntimeConfig) -> int:
     print(f"[runctl] {cfg.num_workers} workers ({cfg.backend} backend), "
           f"k={cfg.k} of T={cfg.total_tasks} coded tasks/round, "
           f"{cfg.num_rounds} rounds, L={cfg.num_layers} resolutions, "
@@ -222,6 +278,38 @@ def main(argv=None) -> int:
         print(format_stage_table(result))
         print("[runctl] omega controller trace:")
         print(format_controller_trace(result))
+
+    if cfg.trace:
+        from repro.runtime import trace_export
+        n_ev = len(result.trace_events or ())
+        drop = (f" ({result.trace_dropped} dropped)"
+                if result.trace_dropped else "")
+        print(f"[runctl] trace: {n_ev} events{drop}")
+        if result.clock_sync:
+            worst = max(result.clock_sync,
+                        key=lambda s: s["rtt_s"] or float("inf"))
+            print(f"[runctl] clock sync: worst link {worst['host']} "
+                  f"offset {worst['offset_s'] * 1e6:+.1f} us, "
+                  f"rtt {(worst['rtt_s'] or 0.0) * 1e6:.1f} us "
+                  f"(alignment error <= rtt/2)")
+        if args.trace:
+            path = pathlib.Path(args.trace)
+            path.parent.mkdir(parents=True, exist_ok=True)
+            trace_export.write_chrome_trace(path, result)
+            print(f"[runctl] wrote {path} (load in Perfetto or "
+                  f"chrome://tracing)")
+        if args.trace_jsonl:
+            path = pathlib.Path(args.trace_jsonl)
+            path.parent.mkdir(parents=True, exist_ok=True)
+            trace_export.write_jsonl(path, result)
+            print(f"[runctl] wrote {path}")
+        if args.metrics_out:
+            path = pathlib.Path(args.metrics_out)
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(trace_export.prometheus_snapshot(result))
+            print(f"[runctl] wrote {path}")
+        if args.timeline:
+            print(trace_export.format_timeline(result))
 
     if args.compare_sim:
         scfg = cfg.to_system_config()

@@ -53,9 +53,14 @@ def main(argv=None) -> int:
                          "as 'LISTENING <host> <port>' on stdout)")
     ap.add_argument("--once", action="store_true",
                     help="exit after the first orderly master session")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="also serve live Prometheus worker metrics on this "
+                         "TCP port at /metrics (0 = ephemeral, announced as "
+                         "'METRICS <host> <port>' on stdout)")
     args = ap.parse_args(argv)
     serve_worker_host(args.port, args.host, once=args.once,
-                      announce=lambda line: print(line, flush=True))
+                      announce=lambda line: print(line, flush=True),
+                      metrics_port=args.metrics_port)
     return 0
 
 

@@ -29,6 +29,10 @@ from repro.runtime.metrics import (STAGES, RuntimeResult, delay_table,
 from repro.runtime.tasks import (BACKEND_NAMES, JobSpec, RoundBatch,
                                  RoundContext, RuntimeConfig, TaskResult,
                                  WireBatch)
+from repro.runtime.telemetry import TraceEvent, Tracer
+from repro.runtime.trace_export import (chrome_trace, format_timeline,
+                                        jsonl_lines, prometheus_snapshot,
+                                        write_chrome_trace, write_jsonl)
 # NOTE: the concrete backend classes (ThreadTransport / ProcessTransport /
 # JaxDeviceTransport) are deliberately NOT re-exported here — importing
 # them eagerly would materialize every backend module (multiprocessing
@@ -51,4 +55,6 @@ __all__ = [
     "FixedPolicy", "AIMDPolicy", "DeadlineMarginPolicy", "margin_ratio",
     "RuntimeResult", "delay_table", "format_delay_table",
     "format_stage_table", "format_controller_trace", "STAGES",
+    "Tracer", "TraceEvent", "chrome_trace", "write_chrome_trace",
+    "jsonl_lines", "write_jsonl", "prometheus_snapshot", "format_timeline",
 ]

@@ -31,6 +31,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import coding
+from repro.runtime import telemetry
 from repro.runtime.tasks import RoundContext, TaskResult
 
 __all__ = ["RoundFusion", "FusionNode", "LayeredResult"]
@@ -39,17 +40,20 @@ __all__ = ["RoundFusion", "FusionNode", "LayeredResult"]
 class RoundFusion:
     """Collects one round's task results; fuses at the k-th arrival."""
 
-    def __init__(self, ctx: RoundContext, k: int):
+    def __init__(self, ctx: RoundContext, k: int,
+                 tracer: Optional[telemetry.Tracer] = None):
         self.ctx = ctx
         self.k = k
         self._lock = threading.Lock()
         self._fused = threading.Event()
         self._ids: list[int] = []
         self._values: list[np.ndarray] = []
+        self._tracer = tracer
         self.fused_at: Optional[float] = None
 
     def post(self, result: TaskResult) -> bool:
         """Deliver one task result; returns False if stale (late/purged)."""
+        fused_now = False
         with self._lock:
             if self._fused.is_set() or self.ctx.cancelled:
                 return False
@@ -57,7 +61,17 @@ class RoundFusion:
             self._values.append(result.value)
             if len(self._ids) == self.k:
                 self.fused_at = result.finished_at
+                fused_now = True
                 self._fused.set()
+        tr = self._tracer
+        if tr is not None:
+            tr.emit(telemetry.RESULT, result.finished_at,
+                    job=result.job_id, round=result.round_idx,
+                    task=result.task_id, worker=result.worker_id)
+            if fused_now:
+                tr.emit(telemetry.FUSED, result.finished_at,
+                        job=result.job_id, round=result.round_idx,
+                        value=float(self.k))
         return True
 
     def wait(self, timeout: Optional[float]) -> bool:
@@ -74,13 +88,14 @@ class RoundFusion:
 class FusionNode:
     """Routes worker results to the current round; drops stale ones."""
 
-    def __init__(self):
+    def __init__(self, tracer: Optional[telemetry.Tracer] = None):
         self._lock = threading.Lock()
         self._current: Optional[RoundFusion] = None
+        self._tracer = tracer
         self.stale_results = 0
 
     def begin_round(self, ctx: RoundContext, k: int) -> RoundFusion:
-        rf = RoundFusion(ctx, k)
+        rf = RoundFusion(ctx, k, self._tracer)
         with self._lock:
             self._current = rf
         return rf
@@ -94,6 +109,11 @@ class FusionNode:
                 or not rf.post(result)):
             with self._lock:
                 self.stale_results += 1
+            if self._tracer is not None:
+                self._tracer.emit(telemetry.STALE, result.finished_at,
+                                  job=result.job_id, round=result.round_idx,
+                                  task=result.task_id,
+                                  worker=result.worker_id)
 
 
 class LayeredResult:

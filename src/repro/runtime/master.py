@@ -58,7 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import layering
-from repro.runtime import metrics
+from repro.runtime import metrics, telemetry
 from repro.runtime.adaptive import OmegaController, RoundObservation
 from repro.runtime.fusion import FusionNode, LayeredResult
 from repro.runtime.tasks import JobSpec, RoundContext, RuntimeConfig
@@ -119,7 +119,11 @@ class Master:
     def __init__(self, cfg: RuntimeConfig, *, verify: bool = False):
         self.cfg = cfg
         self.verify = verify
-        self.fusion = FusionNode()
+        # telemetry is opt-in (cfg.trace) and free when off: the tracer is
+        # None and every call site below guards on it — no event objects
+        # are ever built on the untraced path
+        self.tracer = telemetry.Tracer() if cfg.trace else None
+        self.fusion = FusionNode(tracer=self.tracer)
         self.controller = OmegaController(cfg)
 
     # -- operand preparation -------------------------------------------------
@@ -164,8 +168,10 @@ class Master:
         if J == 0:
             raise ValueError("need at least one job")
 
+        tr = self.tracer
         pool = make_transport(cfg, sink=self.fusion.post,
-                              rng=np.random.default_rng(cfg.seed + 1))
+                              rng=np.random.default_rng(cfg.seed + 1),
+                              tracer=tr)
         pool.start()
         self._warmup(jobs[0])
 
@@ -182,6 +188,7 @@ class Master:
         rounds_timed = 0
         global_round = 0                  # across jobs (controller clock)
         prev_stale = 0
+        n_retunes = 0                     # controller retunes already traced
         R = len(order)
         prepared: dict[int, tuple] = {}   # job idx -> pre-decomposed planes
 
@@ -196,7 +203,11 @@ class Master:
                 if prep is None:
                     ts = clock()
                     prep = self._prepare(job)
-                    stage["prep"] += clock() - ts
+                    tp = clock()
+                    stage["prep"] += tp - ts
+                    if tr is not None:
+                        tr.emit(telemetry.PREP, ts, tp - ts,
+                                job=job.job_id)
                 qa, qb, scale, ca, cb = prep
                 lr = LayeredResult(job.job_id, L)
                 futures.append(lr)
@@ -217,7 +228,7 @@ class Master:
                 enc_a: dict[tuple[int, int], np.ndarray] = {}
                 enc_b: dict[tuple[int, int], np.ndarray] = {}
 
-                def encode_round(pi, pj):
+                def encode_round(pi, pj, ridx=-1):
                     """Encode one round under the controller's *current*
                     geometry; the returned buffer carries its own
                     ``(code, kappa)`` so a later retune never orphans it —
@@ -234,8 +245,20 @@ class Master:
                     if Yb is None:
                         Yb = enc_b[(T, pj)] = rcode.encode_b(
                             np.asarray(cb[pj], np.float64))
-                    stage["encode"] += clock() - ts
+                    te = clock()
+                    stage["encode"] += te - ts
+                    if tr is not None:
+                        tr.emit(telemetry.ENCODE, ts, te - ts,
+                                job=job.job_id, round=ridx)
                     return Xa, Yb, rcode, rkappa
+
+                def finish_round_traced(rf, ridx, l, published, ts, tp):
+                    tr.emit(telemetry.DECODE, ts, tp - ts,
+                            job=job.job_id, round=ridx)
+                    if published:
+                        tr.emit(telemetry.RESOLUTION, rf.fused_at,
+                                job=job.job_id, round=ridx,
+                                value=float(l), label=f"res{l}")
 
                 def finish_round(rf, ridx, l, pi, pj, rcode):
                     """Decode a fused round, publish its layer if last.
@@ -251,12 +274,15 @@ class Master:
                     tp = clock()
                     stage["decode"] += tp - ts
                     acc[...] += mini * float(1 << ((pi + pj) * cfg.d))
-                    if ridx + 1 == cum[l]:  # layer l's last mini-job fused
+                    published = ridx + 1 == cum[l]
+                    if published:   # layer l's last mini-job fused
                         lr.mark_resolution(l, acc * scale, rf.fused_at)
                     stage["publish"] += clock() - tp
+                    if tr is not None:
+                        finish_round_traced(rf, ridx, l, published, ts, tp)
 
                 # prime the pipeline: round 0's codeword + injected delays
-                nxt = encode_round(order[0][1], order[0][2])
+                nxt = encode_round(order[0][1], order[0][2], 0)
                 nxt_delays = pool.sample_round_delays(nxt[3])
                 pending = None        # fused-but-undecoded previous round
                 term = False
@@ -267,7 +293,7 @@ class Master:
                     ctx = RoundContext(job.job_id, ridx)
                     rf = self.fusion.begin_round(ctx, cfg.k)
                     rcode = nxt[2]
-                    ts = clock()
+                    ts = t_disp = clock()
                     pool.submit_round(ctx, nxt[0], nxt[1], nxt[3],
                                       delays=nxt_delays)
                     stage["dispatch"] += clock() - ts
@@ -284,13 +310,17 @@ class Master:
                     #    next *queued* job
                     if ridx + 1 < R:
                         _, npi, npj = order[ridx + 1]
-                        nxt = encode_round(npi, npj)
+                        nxt = encode_round(npi, npj, ridx + 1)
                         nxt_delays = pool.sample_round_delays(nxt[3])
                     elif (j + 1 < J and j + 1 not in prepared
                           and clock() >= t0 + jobs[j + 1].arrival):
                         ts = clock()
                         prepared[j + 1] = self._prepare(jobs[j + 1])
-                        stage["prep"] += clock() - ts
+                        tp = clock()
+                        stage["prep"] += tp - ts
+                        if tr is not None:
+                            tr.emit(telemetry.PREP, ts, tp - ts,
+                                    job=jobs[j + 1].job_id)
                     # ---------------------------------------------------
                     ts = clock()
                     if t_term is None:
@@ -316,6 +346,10 @@ class Master:
                             pool.assert_alive()
                     tw = clock()
                     stage["wait"] += tw - ts
+                    if tr is not None:
+                        tr.emit(telemetry.ROUND, t_disp, tw - t_disp,
+                                job=job.job_id, round=ridx,
+                                label="fused" if fused else "purged")
                     pool.purge_round(ctx)  # reclaim the round's stragglers
                     # feed the controller this round's signals; a retune
                     # takes effect from the NEXT encode (the buffered
@@ -332,6 +366,13 @@ class Master:
                         utilization=pool.busy_seconds
                         / max(tw - t0, 1e-9)))
                     prev_stale = stale_now
+                    if tr is not None and len(ctrl.trace) > n_retunes:
+                        for rt in ctrl.trace[n_retunes:]:
+                            tr.emit(telemetry.RETUNE, tc, job=job.job_id,
+                                    round=ridx,
+                                    value=float(rt["omega_new"]),
+                                    label=rt["reason"])
+                        n_retunes = len(ctrl.trace)
                     stage["control"] += clock() - tc
                     if not fused:
                         term = True
@@ -341,6 +382,10 @@ class Master:
                     finish_round(*pending)
                 end = clock()
                 lr.release(terminated=term)
+                if tr is not None:
+                    tr.emit(telemetry.JOB, start, end - start,
+                            job=job.job_id,
+                            label="terminated" if term else "completed")
 
                 starts[j] = start - t0
                 ends[j] = end - t0
@@ -375,7 +420,12 @@ class Master:
             verify_errors=verify_errors, stage_seconds=stage,
             stage_rounds=rounds_timed, controller=ctrl.summary(),
             omega_trace=list(ctrl.trace), backend=pool.name,
-            transport_stats=transport_stats)
+            transport_stats=transport_stats,
+            tasks_done=pool.tasks_done, tasks_purged=pool.tasks_purged,
+            trace_events=(tr.events() if tr is not None else None),
+            trace_dropped=(tr.dropped if tr is not None else 0),
+            trace_t0=t0,
+            clock_sync=getattr(pool, "clock_sync", None))
         return result, futures
 
 

@@ -66,6 +66,22 @@ class RuntimeResult(simulator.SimResult):
                          network (socket backend: frames, dispatch/result
                          raw-vs-wire bytes, compression ratio); None for
                          in-process backends.
+    ``tasks_done``       coded tasks computed and emitted across all
+                         workers (exact: collected post-shutdown).
+    ``tasks_purged``     tasks reclaimed by purges before completion.
+    ``trace_events``     time-sorted :class:`~repro.runtime.telemetry.
+                         TraceEvent` list when the run traced
+                         (``cfg.trace=True``); None otherwise.  Remote
+                         events are already rebased onto the master clock.
+    ``trace_dropped``    events lost to tracer ring overflow (0 in any
+                         sanely-sized run).
+    ``trace_t0``         master monotonic-clock instant of the run start;
+                         subtract from ``TraceEvent.t`` to get seconds
+                         from run start (the exporters do this).
+    ``clock_sync``       per-link clock alignment for networked backends:
+                         a list of ``{worker, host, offset_s, rtt_s}``
+                         dicts (offset error is bounded by ``rtt_s``);
+                         None for in-process backends.
 
     ``kappa`` (inherited) is the eq. (1) split of the *initial* geometry;
     under an adaptive policy the per-retune splits live in
@@ -85,6 +101,12 @@ class RuntimeResult(simulator.SimResult):
     omega_trace: list | None = None
     backend: str = "thread"
     transport_stats: dict | None = None
+    tasks_done: int = 0
+    tasks_purged: int = 0
+    trace_events: list | None = None
+    trace_dropped: int = 0
+    trace_t0: float = 0.0
+    clock_sync: list | None = None
 
     @property
     def utilization(self) -> np.ndarray:
@@ -105,10 +127,8 @@ class RuntimeResult(simulator.SimResult):
     def release_histogram(self) -> np.ndarray:
         """(L + 1,) job counts by released resolution; slot 0 = none (-1)."""
         L = self.layer_compute.shape[1]
-        counts = np.zeros(L + 1, dtype=np.int64)
-        for r in self.released:
-            counts[int(r) + 1] += 1
-        return counts
+        rel = np.asarray(self.released, dtype=np.int64)
+        return np.bincount(rel + 1, minlength=L + 1)
 
 
 def delay_table(result: simulator.SimResult,
@@ -187,7 +207,13 @@ def format_controller_trace(result: "RuntimeResult",
 
 
 def format_delay_table(rows: list[dict]) -> str:
-    """Fixed-width rendering of :func:`delay_table` for CLI/bench output."""
+    """Fixed-width rendering of :func:`delay_table` for CLI/bench output.
+
+    An empty ``rows`` list (zero-resolution geometry or a run terminated
+    before any release) renders a placeholder instead of crashing.
+    """
+    if not rows:
+        return "(no resolutions to report)"
     has_bound = "theory_lower_bound" in rows[0]
     head = (f"{'res':>4} {'mean delay':>12} {'p50':>10} {'p95':>10} "
             f"{'success':>8}")

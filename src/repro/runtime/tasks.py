@@ -90,6 +90,8 @@ class RuntimeConfig:
     use_jax_devices: bool = False  # legacy alias for backend="jax"
     hosts: tuple[str, ...] = ()    # socket backend: "host:port" per worker
     compress: str = "auto"         # socket frame codec: COMPRESS_MODES key
+    trace: bool = False            # structured tracing (telemetry module);
+    #                                off by default and free when off
     seed: int = 0
 
     def __post_init__(self):

@@ -103,8 +103,8 @@ def __getattr__(name: str):
 
 def make_transport(cfg: RuntimeConfig,
                    sink: Callable[[TaskResult], None],
-                   rng: Optional[np.random.Generator] = None
-                   ) -> WorkerTransport:
+                   rng: Optional[np.random.Generator] = None,
+                   tracer=None) -> WorkerTransport:
     """Build the configured worker transport (not yet started).
 
     ``cfg.backend`` picks the class; the legacy ``use_jax_devices`` flag
@@ -113,6 +113,11 @@ def make_transport(cfg: RuntimeConfig,
     placed round-robin over local devices).  Conflicting combinations
     (``use_jax_devices`` with an explicitly non-thread backend) are
     rejected at config construction, not here.
+
+    ``tracer`` (a :class:`repro.runtime.telemetry.Tracer`, or None) makes
+    the transport emit dispatch/task/liveness events; in-process backends
+    record straight into it, remote ones ship worker-stamped events back
+    and ingest them clock-rebased.
     """
     backend = cfg.backend
     if backend == "thread" and cfg.use_jax_devices:
@@ -122,4 +127,4 @@ def make_transport(cfg: RuntimeConfig,
     except KeyError:
         raise ValueError(f"unknown worker backend {backend!r}; "
                          f"known: {sorted(_BACKEND_PATHS)}") from None
-    return cls(cfg, sink=sink, rng=rng)
+    return cls(cfg, sink=sink, rng=rng, tracer=tracer)

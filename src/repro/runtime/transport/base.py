@@ -56,6 +56,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.runtime import telemetry
 from repro.runtime.tasks import RoundContext, RuntimeConfig, TaskResult
 
 __all__ = ["StragglerModel", "WorkerTransport"]
@@ -140,9 +141,11 @@ class WorkerTransport(abc.ABC):
 
     def __init__(self, cfg: RuntimeConfig,
                  sink: Callable[[TaskResult], None],
-                 rng: Optional[np.random.Generator] = None):
+                 rng: Optional[np.random.Generator] = None,
+                 tracer: Optional[telemetry.Tracer] = None):
         self._cfg = cfg
         self._sink = sink
+        self._tracer = tracer
         self.straggler = StragglerModel(
             cfg, rng if rng is not None else np.random.default_rng(cfg.seed))
         self._seq = 0
@@ -168,6 +171,9 @@ class WorkerTransport(abc.ABC):
             delays = self.sample_round_delays(kappa)
         ctx.seq = self._seq
         self._seq += 1
+        if self._tracer is not None:
+            self._tracer.emit(telemetry.DISPATCH, clock(), job=ctx.job_id,
+                              round=ctx.round_idx, value=float(ctx.seq))
         lo = 0
         for p in range(self._cfg.num_workers):
             hi = lo + int(kappa[p])

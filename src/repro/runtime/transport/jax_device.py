@@ -34,10 +34,11 @@ class JaxDeviceTransport(ThreadTransport):
 
     def __init__(self, cfg: RuntimeConfig,
                  sink: Callable[[TaskResult], None],
-                 rng: Optional[np.random.Generator] = None):
+                 rng: Optional[np.random.Generator] = None,
+                 tracer=None):
         import jax
         self._devices = jax.devices()
-        super().__init__(cfg, sink, rng)
+        super().__init__(cfg, sink, rng, tracer)
 
     def _compute_for(self, worker_id: int):
         device = self._devices[worker_id % len(self._devices)]

@@ -54,6 +54,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.runtime import telemetry
 from repro.runtime.tasks import (RoundContext, RuntimeConfig, TaskResult,
                                  WireBatch)
 from repro.runtime.transport.base import WorkerTransport
@@ -108,16 +109,26 @@ class _WorkerLoop:
         self.stopping = False
         self._drain_on_stop = True
         self.queue: collections.deque[WireBatch] = collections.deque()
+        # worker-side tracer: events are stamped on THIS host's monotonic
+        # clock and ride back piggybacked on result / final-stats
+        # envelopes (optional trailing element, absent when tracing is
+        # off so the wire format is unchanged for untraced runs)
+        self.tracer = telemetry.Tracer() if cfg.trace else None
         self.runner = BatchRunner(worker_id, make_compute(cfg, worker_id),
-                                  self._emit)
+                                  self._emit, self.tracer)
 
     @property
     def purging(self) -> bool:
         return self.stopping and not self._drain_on_stop
 
     def _emit(self, result: TaskResult) -> None:
-        self._results.put(("result", result.to_wire(),
-                           self.runner.busy_seconds))
+        if self.tracer is not None:
+            self._results.put(("result", result.to_wire(),
+                               self.runner.busy_seconds,
+                               self.tracer.drain()))
+        else:
+            self._results.put(("result", result.to_wire(),
+                               self.runner.busy_seconds))
 
     def _handle(self, msg: tuple) -> None:
         kind = msg[0]
@@ -154,14 +165,17 @@ class _WorkerLoop:
             if self.queue:
                 batch = self.queue.popleft()
                 if batch.seq <= self.watermark or self.purging:
-                    self.runner.tasks_purged += batch.count
+                    self.runner.count_purged(batch)
                     continue
                 self.runner.run(batch, _PipeGuard(self, batch.seq))
             elif self.stopping:
                 break
-        self._results.put(("stats", self.runner.worker_id,
-                           self.runner.busy_seconds, self.runner.tasks_done,
-                           self.runner.tasks_purged))
+        stats = ("stats", self.runner.worker_id,
+                 self.runner.busy_seconds, self.runner.tasks_done,
+                 self.runner.tasks_purged)
+        if self.tracer is not None:
+            stats += (self.tracer.drain(),)
+        self._results.put(stats)
 
 
 def _worker_main(worker_id: int, cfg: RuntimeConfig, conn, results) -> None:
@@ -181,9 +195,10 @@ class ProcessTransport(WorkerTransport):
 
     def __init__(self, cfg: RuntimeConfig,
                  sink: Callable[[TaskResult], None],
-                 rng: Optional[np.random.Generator] = None, *,
+                 rng: Optional[np.random.Generator] = None,
+                 tracer=None, *,
                  start_method: Optional[str] = None):
-        super().__init__(cfg, sink, rng)
+        super().__init__(cfg, sink, rng, tracer)
         if start_method is None:
             methods = multiprocessing.get_all_start_methods()
             start_method = "fork" if "fork" in methods else "spawn"
@@ -300,17 +315,24 @@ class ProcessTransport(WorkerTransport):
                     return
                 continue
             if msg[0] == "result":
-                _, wire, busy = msg
+                wire, busy = msg[1], msg[2]
                 result = TaskResult.from_wire(wire)
                 with self._stats_lock:
                     self._busy[result.worker_id] = busy
+                # piggybacked worker events (traced runs only); process
+                # workers share the system-wide CLOCK_MONOTONIC, so no
+                # clock rebase is needed
+                if len(msg) > 3 and self._tracer is not None:
+                    self._tracer.ingest(msg[3])
                 self._sink(result)
             elif msg[0] == "stats":
-                _, worker_id, busy, done, purged = msg
+                worker_id, busy, done, purged = msg[1:5]
                 with self._stats_lock:
                     self._busy[worker_id] = busy
                     self._done += done
                     self._purged += purged
+                if len(msg) > 5 and self._tracer is not None:
+                    self._tracer.ingest(msg[5])
 
     # -- occupancy / outcome counters ----------------------------------------
     @property

@@ -63,6 +63,7 @@ the internet.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import pathlib
 import select
@@ -79,6 +80,7 @@ from typing import Callable, Optional
 import numpy as np
 import pickle
 
+from repro.runtime import telemetry
 from repro.runtime.tasks import (RoundContext, RuntimeConfig, TaskResult,
                                  WireBatch)
 from repro.runtime.transport.base import WorkerTransport
@@ -302,7 +304,14 @@ class _SocketWorkerLoop(_WorkerLoop):
 
     def _handle(self, msg: tuple) -> None:
         if msg[0] == "ping":
-            self.conn.send(("pong",))
+            # echo the master's send instant and stamp our own monotonic
+            # clock: the master estimates this host's clock offset as
+            # t_worker - (t_send + t_recv)/2, error bounded by rtt/2.
+            # A bare ("ping",) (older master) gets the bare legacy pong.
+            if len(msg) > 1:
+                self.conn.send(("pong", msg[1], clock()))
+            else:
+                self.conn.send(("pong",))
         else:
             super()._handle(msg)
 
@@ -321,7 +330,8 @@ class _ConnResults:
 
 def serve_worker_host(port: int = 0, host: str = "127.0.0.1", *,
                       once: bool = False,
-                      announce: Callable[[str], None] = print) -> None:
+                      announce: Callable[[str], None] = print,
+                      metrics_port: Optional[int] = None) -> None:
     """Run one worker host: listen, serve master sessions until killed.
 
     A *session* starts with a ``("hello", worker_id, cfg, session_id,
@@ -336,64 +346,88 @@ def serve_worker_host(port: int = 0, host: str = "127.0.0.1", *,
     ``port=0`` binds an ephemeral port; the chosen one is announced as
     ``LISTENING <host> <port>`` (the line :class:`LocalCluster` parses).
     ``once`` exits after the first orderly session — CI hygiene.
+
+    ``metrics_port`` (``0`` = ephemeral) additionally serves this host's
+    live counters (busy seconds, tasks done/purged, sessions served) as a
+    Prometheus text endpoint on ``/metrics``, announced as
+    ``METRICS <host> <port>`` — scrapeable mid-run, surviving between
+    sessions with the last session's totals.
     """
     srv = socket.create_server((host, port))
     srv.listen(1)
     bound_port = srv.getsockname()[1]
     announce(f"LISTENING {host} {bound_port}")
 
+    state = {"runner": None, "sessions": 0}
+    metrics_server = None
+    if metrics_port is not None:
+        def _render() -> str:
+            return telemetry.worker_metrics_text(
+                state["runner"], sessions=state["sessions"])
+        metrics_server, bound_metrics = telemetry.serve_metrics(
+            _render, metrics_port, host)
+        announce(f"METRICS {host} {bound_metrics}")
+
     session_id = None          # the session a reconnect may resume
     runner = None
     watermark = -1
 
-    while True:
-        try:
-            raw_sock, _addr = srv.accept()
-        except (KeyboardInterrupt, OSError):
-            return
-        raw_sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        conn = _SockConn(raw_sock)
-        try:
-            hello = conn.recv()
-            if not (isinstance(hello, tuple) and hello[0] == "hello"):
-                raise FrameError(f"expected hello, got {hello!r}")
-            _, worker_id, cfg, sid, master_watermark = hello
-            conn.compress = cfg.compress
-            loop = _SocketWorkerLoop(worker_id, cfg, conn,
-                                     _ConnResults(conn))
-            if sid == session_id and runner is not None:
-                # same master reconnecting: keep its counters and
-                # watermark, pointing the kept runner's emit at the
-                # fresh connection
-                loop.runner = runner
-                runner._emit = loop._emit
-                loop.watermark = max(watermark, master_watermark)
-            else:
-                # a new master (or one that lost its old host state):
-                # the loop's own fresh runner, master's watermark only
-                loop.watermark = master_watermark
-            runner = loop.runner
-            session_id = sid
+    try:
+        while True:
             try:
-                loop.run()
-            finally:
-                watermark = loop.watermark
-            # run() returned: orderly stop — stats are already sent;
-            # discard session state so the next hello starts clean
-            session_id = None
-            runner = None
-            watermark = -1
-            if once:
+                raw_sock, _addr = srv.accept()
+            except (KeyboardInterrupt, OSError):
                 return
-        except (EOFError, ConnectionError, FrameError, OSError):
-            # dropped/garbled connection: keep session state for a
-            # resuming master; anything queued died with the connection
-            # and the master's purge watermark will cover it
-            pass
-        except KeyboardInterrupt:
-            return
-        finally:
-            conn.close()
+            raw_sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = _SockConn(raw_sock)
+            try:
+                hello = conn.recv()
+                if not (isinstance(hello, tuple) and hello[0] == "hello"):
+                    raise FrameError(f"expected hello, got {hello!r}")
+                _, worker_id, cfg, sid, master_watermark = hello
+                conn.compress = cfg.compress
+                loop = _SocketWorkerLoop(worker_id, cfg, conn,
+                                         _ConnResults(conn))
+                if sid == session_id and runner is not None:
+                    # same master reconnecting: keep its counters and
+                    # watermark, pointing the kept runner's emit at the
+                    # fresh connection
+                    loop.runner = runner
+                    runner._emit = loop._emit
+                    loop.watermark = max(watermark, master_watermark)
+                else:
+                    # a new master (or one that lost its old host state):
+                    # the loop's own fresh runner, master's watermark only
+                    loop.watermark = master_watermark
+                    state["sessions"] += 1
+                runner = loop.runner
+                state["runner"] = runner
+                session_id = sid
+                try:
+                    loop.run()
+                finally:
+                    watermark = loop.watermark
+                # run() returned: orderly stop — stats are already sent;
+                # discard session state so the next hello starts clean
+                session_id = None
+                runner = None
+                watermark = -1
+                if once:
+                    return
+            except (EOFError, ConnectionError, FrameError, OSError):
+                # dropped/garbled connection: keep session state for a
+                # resuming master; anything queued died with the
+                # connection and the master's purge watermark will cover
+                # it
+                pass
+            except KeyboardInterrupt:
+                return
+            finally:
+                conn.close()
+    finally:
+        if metrics_server is not None:
+            metrics_server.shutdown()
+        srv.close()
 
 
 # -- master side --------------------------------------------------------------
@@ -415,6 +449,11 @@ class _WorkerLink:
         self.dead: Optional[str] = None  # reason, once declared dead
         self.got_stats = threading.Event()
         self._closed_conn_stats = np.zeros(6, dtype=np.int64)
+        # clock alignment: offset = worker_clock - master_clock, taken
+        # from the minimum-RTT ping/pong exchange so the error is bounded
+        # by rtt/2 (<= clock_rtt); refreshed by every heartbeat pong
+        self.clock_offset = 0.0
+        self.clock_rtt = float("inf")
         self.receiver = threading.Thread(
             target=self._receive, daemon=True,
             name=f"runtime-socket-recv-{worker_id}")
@@ -450,6 +489,45 @@ class _WorkerLink:
         self.conn.send(("hello", self.worker_id, t._cfg, t._session,
                         t._watermark))
 
+    def sync_clock(self, samples: int = 5) -> None:
+        """Estimate this link's clock offset with synchronous ping/pong
+        roundtrips (start path, before the receiver thread runs).
+
+        Keeps the estimate from the minimum-RTT exchange:
+        ``offset = t_worker - (t_send + t_recv)/2`` — symmetric-path
+        assumption, so the alignment error is at most ``rtt/2``.
+        Heartbeat pongs keep refreshing it for the rest of the run.
+        """
+        with self.lock:
+            conn = self.conn
+            if conn is None or self.dead is not None:
+                return
+            for _ in range(samples):
+                try:
+                    t_send = clock()
+                    conn.send(("ping", t_send))
+                    msg = conn.recv()
+                    t_recv = clock()
+                except (OSError, ConnectionError, EOFError, FrameError):
+                    return          # liveness machinery will handle it
+                if msg[0] != "pong" or len(msg) < 3:
+                    continue
+                rtt = t_recv - t_send
+                if rtt < self.clock_rtt:
+                    self.clock_rtt = rtt
+                    self.clock_offset = msg[2] - 0.5 * (t_send + t_recv)
+            self.last_seen = clock()
+
+    def observe_pong(self, t_send: float, t_worker: float,
+                     t_recv: float) -> float:
+        """Fold one timestamped pong into the offset estimate; returns
+        the exchange's RTT."""
+        rtt = t_recv - t_send
+        if 0.0 <= rtt < self.clock_rtt:
+            self.clock_rtt = rtt
+            self.clock_offset = t_worker - 0.5 * (t_send + t_recv)
+        return rtt
+
     def _reconnect_or_fail(self, why: str) -> bool:
         """One bounded reconnect pass; returns True if the link is back.
 
@@ -471,6 +549,10 @@ class _WorkerLink:
                 if old is not None and old is not self.conn:
                     self._fold_stats(old)
                     old.close()
+                tr = self.transport._tracer
+                if tr is not None:
+                    tr.emit(telemetry.RECONNECT, clock(),
+                            worker=self.worker_id, label=why)
                 return True
             except (OSError, ConnectionError, EOFError):
                 time.sleep(self.transport.reconnect_backoff)
@@ -482,6 +564,10 @@ class _WorkerLink:
         with self.lock:
             if self.dead is None:
                 self.dead = reason
+                tr = self.transport._tracer
+                if tr is not None and reason != "shutdown":
+                    tr.emit(telemetry.DEAD, clock(),
+                            worker=self.worker_id, label=reason)
             if self.conn is not None:
                 self.conn.close()
 
@@ -558,20 +644,36 @@ class _WorkerLink:
             self.last_seen = clock()
             kind = msg[0]
             if kind == "result":
-                _, wire, busy = msg
+                wire, busy = msg[1], msg[2]
                 result = TaskResult.from_wire(wire)
+                off = self.clock_offset
+                if off:
+                    # rebase the remote finished_at onto the master's
+                    # clock so fusion timestamps (fused_at, delay tables)
+                    # stay comparable on genuinely multi-host clusters
+                    result = dataclasses.replace(
+                        result, finished_at=result.finished_at - off)
                 with t._stats_lock:
                     t._busy[result.worker_id] = busy
+                if len(msg) > 3 and t._tracer is not None:
+                    # piggybacked worker events, rebased into master time
+                    t._tracer.ingest(msg[3], shift=-off)
                 t._sink(result)
             elif kind == "stats":
-                _, worker_id, busy, done, purged = msg
+                worker_id, busy, done, purged = msg[1:5]
                 with t._stats_lock:
                     t._busy[worker_id] = busy
                     t._done += done
                     t._purged += purged
+                if len(msg) > 5 and t._tracer is not None:
+                    t._tracer.ingest(msg[5], shift=-self.clock_offset)
                 self.got_stats.set()
             elif kind == "pong":
-                pass
+                if len(msg) >= 3:   # timestamped: refresh clock estimate
+                    rtt = self.observe_pong(msg[1], msg[2], self.last_seen)
+                    if t._tracer is not None:
+                        t._tracer.emit(telemetry.HEARTBEAT, self.last_seen,
+                                       worker=self.worker_id, value=rtt)
             # unknown frames are ignored: forward compatibility
 
 
@@ -584,14 +686,15 @@ class SocketTransport(WorkerTransport):
 
     def __init__(self, cfg: RuntimeConfig,
                  sink: Callable[[TaskResult], None],
-                 rng: Optional[np.random.Generator] = None, *,
+                 rng: Optional[np.random.Generator] = None,
+                 tracer=None, *,
                  connect_timeout: float = 30.0,
                  heartbeat_interval: float = 1.0,
                  heartbeat_timeout: float = 15.0,
                  reconnect_attempts: int = 2,
                  reconnect_timeout: float = 1.0,
                  reconnect_backoff: float = 0.05):
-        super().__init__(cfg, sink, rng)
+        super().__init__(cfg, sink, rng, tracer)
         if cfg.compress == "lz4" and not have_lz4():
             raise ValueError("compress='lz4' but lz4 is not installed; "
                              "use 'zlib' or 'auto'")
@@ -620,6 +723,11 @@ class SocketTransport(WorkerTransport):
     def start(self) -> None:
         for link in self.links:
             link.connect(self.connect_timeout)
+        for link in self.links:
+            # synchronous roundtrips before the receiver competes for the
+            # connection: every link starts with a bounded-error clock
+            # offset, refreshed by heartbeat pongs for the rest of the run
+            link.sync_clock()
         for link in self.links:
             link.receiver.start()
         self._heartbeat.start()
@@ -673,7 +781,7 @@ class SocketTransport(WorkerTransport):
                         f"no frame for {now - link.last_seen:.1f}s "
                         f"(heartbeat timeout {self.heartbeat_timeout}s)")
                     continue
-                link.send(("ping",))
+                link.send(("ping", clock()))
 
     def _dead_workers(self) -> list[str]:
         if not self._started or self._shutting_down:
@@ -721,6 +829,23 @@ class SocketTransport(WorkerTransport):
         """Exact after shutdown (final stats); 0 while running."""
         with self._stats_lock:
             return self._purged
+
+    @property
+    def clock_sync(self) -> list:
+        """Per-link clock alignment: ``{worker, host, offset_s, rtt_s}``.
+
+        ``offset_s`` is the estimated ``worker_clock - master_clock``
+        from the minimum-RTT ping/pong exchange; the estimation error is
+        bounded by ``rtt_s`` (strictly, rtt/2 under symmetric paths).
+        ``rtt_s`` is None only if a link never completed a timestamped
+        exchange (dead before start finished).
+        """
+        return [{"worker": ln.worker_id,
+                 "host": f"{ln.host}:{ln.port}",
+                 "offset_s": ln.clock_offset,
+                 "rtt_s": (ln.clock_rtt
+                           if ln.clock_rtt != float("inf") else None)}
+                for ln in self.links]
 
     @property
     def wire_stats(self) -> dict:

@@ -57,6 +57,7 @@ from typing import Callable, Optional, Protocol
 
 import numpy as np
 
+from repro.runtime import telemetry
 from repro.runtime.tasks import (RoundBatch, RoundContext, RuntimeConfig,
                                  TaskResult, WireBatch)
 from repro.runtime.transport.base import StragglerModel, WorkerTransport
@@ -141,35 +142,71 @@ class BatchRunner:
 
     def __init__(self, worker_id: int,
                  compute: Callable[[np.ndarray, np.ndarray], np.ndarray],
-                 emit: Callable[[TaskResult], None]):
+                 emit: Callable[[TaskResult], None],
+                 tracer: Optional[telemetry.Tracer] = None):
         self.worker_id = worker_id
         self._compute = compute
         self._emit = emit
+        self._tracer = tracer
         self.busy_seconds = 0.0
         self.tasks_done = 0
         self.tasks_purged = 0
 
+    def count_purged(self, batch: RoundBatch | WireBatch,
+                     start: int = 0) -> None:
+        """Account a batch tail ``[start:]`` abandoned without running.
+
+        Transports call this for slices they drop wholesale (purge-mode
+        shutdown, dead-on-arrival remote batches) so the purge counter —
+        and, when tracing, the per-task ``purged`` span — stays exact on
+        every backend.
+        """
+        self.tasks_purged += batch.count - start
+        if self._tracer is not None:
+            now = clock()
+            for i in range(start, batch.count):
+                self._tracer.emit(telemetry.TASK, now, 0.0, batch.job_id,
+                                  batch.round_idx, batch.first_task_id + i,
+                                  self.worker_id, 0.0, "purged")
+
     def run(self, batch: RoundBatch | WireBatch, guard: CancelGuard) -> None:
         """Run one round slice to completion or cancellation."""
+        tr = self._tracer
         for i in range(batch.count):
             if guard.cancelled():
-                self.tasks_purged += batch.count - i
+                self.count_purged(batch, i)
                 return
             t0 = clock()
             delay = float(batch.delays[i])
             if delay > 0.0 and guard.wait(delay):
                 # reclaimed mid-delay: the wait so far was real occupancy
-                self.busy_seconds += clock() - t0
-                self.tasks_purged += batch.count - i
+                now = clock()
+                self.busy_seconds += now - t0
+                self.tasks_purged += 1
+                if tr is not None:
+                    tr.emit(telemetry.TASK, t0, now - t0, batch.job_id,
+                            batch.round_idx, batch.first_task_id + i,
+                            self.worker_id, delay, "purged")
+                self.count_purged(batch, i + 1)
                 return
             if guard.cancelled():
-                self.busy_seconds += clock() - t0
-                self.tasks_purged += batch.count - i
+                now = clock()
+                self.busy_seconds += now - t0
+                self.tasks_purged += 1
+                if tr is not None:
+                    tr.emit(telemetry.TASK, t0, now - t0, batch.job_id,
+                            batch.round_idx, batch.first_task_id + i,
+                            self.worker_id, delay, "purged")
+                self.count_purged(batch, i + 1)
                 return
             value = self._compute(batch.x[i], batch.y[i])
             now = clock()
             self.busy_seconds += now - t0
             self.tasks_done += 1
+            if tr is not None:
+                tr.emit(telemetry.TASK, t0, now - t0, batch.job_id,
+                        batch.round_idx, batch.first_task_id + i,
+                        self.worker_id, delay, "done")
             self._emit(TaskResult(job_id=batch.job_id,
                                   round_idx=batch.round_idx,
                                   task_id=batch.first_task_id + i,
@@ -214,10 +251,11 @@ class Worker(threading.Thread):
 
     def __init__(self, worker_id: int,
                  sink: Callable[[TaskResult], None],
-                 compute: Callable[[np.ndarray, np.ndarray], np.ndarray]):
+                 compute: Callable[[np.ndarray, np.ndarray], np.ndarray],
+                 tracer: Optional[telemetry.Tracer] = None):
         super().__init__(name=f"runtime-worker-{worker_id}", daemon=True)
         self.worker_id = worker_id
-        self.runner = BatchRunner(worker_id, compute, sink)
+        self.runner = BatchRunner(worker_id, compute, sink, tracer)
         self._queue: collections.deque[RoundBatch] = collections.deque()
         self._cv = threading.Condition()
         self._stopping = False
@@ -269,8 +307,8 @@ class Worker(threading.Thread):
                 if not self._queue:
                     return          # stopping and drained
                 if self.purging:    # stopping in purge mode: count + exit
-                    purged = sum(b.count for b in self._queue)
-                    self.runner.tasks_purged += purged
+                    for b in self._queue:
+                        self.runner.count_purged(b)
                     self._queue.clear()
                     return
                 batch = self._queue.popleft()
@@ -295,9 +333,10 @@ class WorkerPool(WorkerTransport):
 
     def __init__(self, cfg: RuntimeConfig,
                  sink: Callable[[TaskResult], None],
-                 rng: Optional[np.random.Generator] = None):
-        super().__init__(cfg, sink, rng)
-        self.workers = [Worker(p, sink, self._compute_for(p))
+                 rng: Optional[np.random.Generator] = None,
+                 tracer: Optional[telemetry.Tracer] = None):
+        super().__init__(cfg, sink, rng, tracer)
+        self.workers = [Worker(p, sink, self._compute_for(p), tracer)
                         for p in range(cfg.num_workers)]
         self._started = False
         self._shutting_down = False

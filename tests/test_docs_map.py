@@ -50,7 +50,7 @@ def test_docs_exist_and_carry_anchors():
     files = doc_files()
     names = {p.name for p in files}
     assert {"paper-map.md", "architecture.md",
-            "adaptive-omega.md"} <= names, names
+            "adaptive-omega.md", "observability.md"} <= names, names
     assert anchors_in(DOCS / "paper-map.md"), \
         "paper-map.md lost its code anchors"
 
@@ -79,5 +79,7 @@ def test_paper_map_covers_the_load_bearing_surface():
             "repro.core.simulator.simulate",
             "repro.runtime.master.Master.run",
             "repro.runtime.adaptive.OmegaController",
+            "repro.runtime.telemetry.Tracer",
+            "repro.runtime.trace_export.chrome_trace",
     ):
         assert required in text, f"paper-map.md no longer maps {required}"

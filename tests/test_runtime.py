@@ -12,8 +12,9 @@ import pytest
 
 from repro.core import layering, simulator
 from repro.runtime import (FusionNode, LayeredResult, Master, RoundFusion,
-                           RuntimeConfig, StragglerModel, make_jobs,
-                           run_jobs)
+                           RuntimeConfig, StragglerModel, format_delay_table,
+                           make_jobs, run_jobs)
+from repro.runtime.metrics import RuntimeResult
 from repro.runtime.tasks import RoundContext, TaskResult
 
 
@@ -144,6 +145,43 @@ class TestConfig:
         assert scfg.k == cfg.k and scfg.total_tasks == cfg.total_tasks
         assert scfg.m == cfg.m and scfg.mu == cfg.mu
         assert scfg.arrival_rate == cfg.arrival_rate
+
+
+def _metrics_result(released, L=3):
+    """Minimal RuntimeResult with just the fields the metrics under test
+    read (released + layer_compute's L)."""
+    J = len(released)
+    return RuntimeResult(
+        arrivals=np.zeros(J), starts=np.zeros(J), ends=np.zeros(J),
+        layer_compute=np.zeros((J, L)), success=np.ones((J, L), bool),
+        terminated=np.zeros(J, bool), kappa=np.zeros(3, dtype=np.int64),
+        released=np.asarray(released, dtype=np.int64))
+
+
+class TestMetrics:
+    def test_format_delay_table_empty_rows(self):
+        """Regression: an empty table (e.g. a run terminated before any
+        release) must render a placeholder, not IndexError on rows[0]."""
+        assert format_delay_table([]) == "(no resolutions to report)"
+
+    def test_format_delay_table_none_percentiles(self):
+        table = format_delay_table([{
+            "resolution": 0, "mean_delay": float("inf"),
+            "p50_delay": None, "p95_delay": None, "success_rate": 0.0}])
+        assert "-" in table and "res" in table
+
+    def test_release_histogram_counts_and_dtype(self):
+        res = _metrics_result([-1, 0, 0, 2, 1, 2, 2], L=3)
+        hist = res.release_histogram()
+        assert hist.tolist() == [1, 2, 1, 3]     # none, res0, res1, res2
+        assert hist.sum() == res.num_jobs
+
+    def test_release_histogram_empty_and_single_bin(self):
+        assert _metrics_result([], L=3).release_histogram().tolist() == \
+            [0, 0, 0, 0]
+        # all jobs unreleased: histogram still spans every resolution
+        assert _metrics_result([-1, -1], L=2).release_histogram().tolist() \
+            == [2, 0, 0]
 
 
 class TestEndToEnd:

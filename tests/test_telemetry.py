@@ -1,0 +1,303 @@
+"""Structured tracing: tracer units, exporters, and cross-backend
+conformance.
+
+The conformance half runs real traced workloads over every transport
+({thread, process, socket} — socket against a live LocalCluster) and
+checks the one property that makes the trace trustworthy: the event log
+*reconciles exactly* with the run's aggregate counters.  Every
+``tasks_done`` increment has a ``done`` task span, every purge a
+``purged`` one, every stale result a ``stale`` instant, every dispatched
+round exactly one round span — over any backend, including events that
+crossed a process or TCP boundary to get here.
+"""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.runtime import RuntimeConfig, run_jobs
+from repro.runtime import telemetry
+from repro.runtime import trace_export
+from repro.runtime.telemetry import TraceEvent, Tracer
+from repro.runtime.transport.socket_host import LocalCluster
+
+MU3 = (400.0, 650.0, 380.0)
+BACKENDS_FULL = ("thread", "process", "socket")
+
+
+@pytest.fixture(scope="session")
+def socket_cluster():
+    with LocalCluster(len(MU3)) as cluster:
+        yield cluster
+
+
+@pytest.fixture
+def bcfg(request):
+    def make(backend, **kw):
+        kw.setdefault("mu", MU3)
+        kw.setdefault("trace", True)
+        if backend == "socket":
+            kw.setdefault(
+                "hosts", request.getfixturevalue("socket_cluster").hosts)
+        return RuntimeConfig(backend=backend, **kw)
+
+    return make
+
+
+class TestTracer:
+    def test_emit_and_sorted_events(self):
+        tr = Tracer()
+        tr.emit(telemetry.ENCODE, 2.0, dur=0.5, job=1, round=0)
+        tr.emit(telemetry.DISPATCH, 1.0, job=1, round=0, value=7.0)
+        evs = tr.events()
+        assert [e.kind for e in evs] == ["dispatch", "encode"]  # time order
+        assert evs[1].dur == 0.5 and evs[0].value == 7.0
+        assert tr.events() == evs            # non-destructive
+
+    def test_drain_takes_and_clears(self):
+        tr = Tracer()
+        tr.emit(telemetry.TASK, 1.0, dur=0.1, label="done")
+        assert len(tr.drain()) == 1
+        assert tr.drain() == [] and tr.events() == []
+
+    def test_ring_overflow_keeps_newest_and_counts_drops(self):
+        tr = Tracer(capacity=4)
+        for i in range(10):
+            tr.emit(telemetry.RESULT, float(i))
+        evs = tr.events()
+        assert len(evs) == 4 and tr.dropped == 6
+        assert [e.t for e in evs] == [6.0, 7.0, 8.0, 9.0]   # oldest evicted
+
+    def test_ingest_rebases_remote_clock(self):
+        tr = Tracer()
+        remote = [tuple(TraceEvent(telemetry.TASK, 100.0, 0.25, 3, 1, 2, 0,
+                                   0.0, "done"))]
+        tr.ingest(remote, shift=-90.0)
+        ev = tr.events()[0]
+        assert ev.t == pytest.approx(10.0)
+        assert (ev.dur, ev.job, ev.round, ev.task, ev.label) == \
+            (0.25, 3, 1, 2, "done")
+        tr.ingest(remote)                    # shift=0 fast path
+        assert tr.events()[-1].t == pytest.approx(100.0)
+
+    def test_threads_do_not_interleave_rings(self):
+        tr = Tracer()
+        n = 500
+
+        def record(worker):
+            for i in range(n):
+                tr.emit(telemetry.TASK, float(i), worker=worker)
+
+        threads = [threading.Thread(target=record, args=(w,))
+                   for w in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        evs = tr.events()
+        assert len(evs) == 4 * n and tr.dropped == 0
+        counts = np.bincount([e.worker for e in evs])
+        assert counts.tolist() == [n] * 4
+
+    def test_taxonomy_is_partitioned(self):
+        assert not (telemetry.SPAN_KINDS & telemetry.INSTANT_KINDS)
+        assert telemetry.EVENT_KINDS == \
+            telemetry.SPAN_KINDS | telemetry.INSTANT_KINDS
+
+
+class TestExporters:
+    @pytest.fixture(scope="class")
+    def traced(self):
+        cfg = RuntimeConfig(mu=MU3, arrival_rate=60.0, complexity=4.0,
+                            straggler="none", trace=True, seed=0)
+        res, _ = run_jobs(cfg, 4, K=16, M=4, N=4, verify=False)
+        return res
+
+    def test_chrome_trace_is_perfetto_shaped(self, traced):
+        chrome = trace_export.chrome_trace(traced)
+        json.dumps(chrome)                   # serializable end to end
+        evs = chrome["traceEvents"]
+        assert chrome["displayTimeUnit"] == "ms"
+        phases = {e["ph"] for e in evs}
+        assert phases <= {"M", "X", "i"}
+        spans = [e for e in evs if e["ph"] == "X"]
+        assert spans and all(e["dur"] >= 0.0 and e["ts"] >= 0.0
+                             for e in spans)
+        assert all(e["s"] == "t" for e in evs if e["ph"] == "i")
+        names = [e["args"]["name"] for e in evs
+                 if e["ph"] == "M" and e["name"] == "process_name"]
+        assert names[0].startswith("master")
+        assert len(names) == 1 + len(MU3)    # master + one per worker
+        # worker task spans live in per-worker processes, master gets none
+        assert all(e["pid"] >= 1 for e in evs if e.get("cat") == "task")
+
+    def test_jsonl_round_trips(self, traced):
+        lines = list(trace_export.jsonl_lines(traced))
+        assert len(lines) == len(traced.trace_events)
+        recs = [json.loads(line) for line in lines]
+        assert all(r["t"] >= 0.0 for r in recs)
+        assert {r["kind"] for r in recs} <= telemetry.EVENT_KINDS
+
+    def test_prometheus_snapshot_counters(self, traced):
+        text = trace_export.prometheus_snapshot(traced)
+        assert text.endswith("\n")
+        assert f'repro_tasks_done_total{{backend="thread"}} ' \
+               f"{traced.tasks_done}" in text
+        assert f'repro_rounds_total{{backend="thread"}} ' \
+               f"{traced.stage_rounds}" in text
+        hist = traced.release_histogram()
+        assert f'repro_jobs_released_total{{resolution="-1"}} ' \
+               f"{int(hist[0])}" in text
+
+    def test_format_timeline_rows(self, traced):
+        art = trace_export.format_timeline(traced, width=60)
+        lines = art.splitlines()
+        assert lines[0].startswith("timeline")
+        assert lines[1].lstrip().startswith("master")
+        assert len(lines) == 2 + len(MU3)    # header + master + workers
+        assert any("#" in line for line in lines[2:])
+
+    def test_untraced_result_rejected(self):
+        cfg = RuntimeConfig(mu=MU3, arrival_rate=60.0, complexity=4.0,
+                            straggler="none", seed=0)
+        res, _ = run_jobs(cfg, 2, K=16, M=4, N=4, verify=False)
+        assert res.trace_events is None and res.tasks_done > 0
+        with pytest.raises(ValueError, match="trace"):
+            trace_export.chrome_trace(res)
+        # prometheus reads counters only: works untraced by design
+        assert "repro_tasks_done_total" in \
+            trace_export.prometheus_snapshot(res)
+
+
+@pytest.mark.parametrize("backend", BACKENDS_FULL)
+class TestTraceConformance:
+    """Same schema, exact counter reconciliation, over every transport."""
+
+    def test_events_reconcile_with_counters(self, backend, bcfg):
+        cfg = bcfg(backend, arrival_rate=60.0, complexity=4.0,
+                   straggler="none", seed=0)
+        res, _ = run_jobs(cfg, 5, K=16, M=4, N=4, verify=False)
+        evs = res.trace_events
+        assert evs is not None and res.trace_dropped == 0
+        assert {e.kind for e in evs} <= telemetry.EVENT_KINDS
+        assert all(isinstance(e, TraceEvent) for e in evs)
+
+        tasks = [e for e in evs if e.kind == telemetry.TASK]
+        assert sum(e.label == "done" for e in tasks) == res.tasks_done
+        assert sum(e.label == "purged" for e in tasks) == res.tasks_purged
+        assert sum(e.kind == telemetry.STALE for e in evs) == \
+            res.stale_results
+        rounds = [e for e in evs if e.kind == telemetry.ROUND]
+        assert len(rounds) == res.stage_rounds
+        assert sum(e.kind == telemetry.DISPATCH for e in evs) == \
+            res.stage_rounds
+        # accepted arrivals: k per fused round, all within the run window
+        fused = sum(e.kind == telemetry.FUSED for e in evs)
+        arrivals = sum(e.kind == telemetry.RESULT for e in evs)
+        assert arrivals == fused * cfg.k
+        assert sum(e.kind == telemetry.JOB for e in evs) == res.num_jobs
+        # the merged log is time-sorted and anchored at the run start
+        ts = [e.t for e in evs]
+        assert ts == sorted(ts)
+        assert all(e.t - res.trace_t0 > -1e-4 for e in evs)
+
+    def test_purged_task_spans_close_purged_not_fused(self, backend, bcfg):
+        """A deadline-purged round's tasks must close as ``purged`` —
+        never as ``fused``/``done`` — and the purged round span must say
+        so too."""
+        cfg = bcfg(backend, arrival_rate=14.0, complexity=8.0,
+                   deadline=0.030, straggler="stall", stall_workers=(2,),
+                   stall_seconds=2.0, seed=0)
+        res, _ = run_jobs(cfg, 10, K=16, M=4, N=4, verify=False)
+        evs = res.trace_events
+        assert res.tasks_purged > 0          # the stall really binds
+        tasks = [e for e in evs if e.kind == telemetry.TASK]
+        assert {e.label for e in tasks} <= {"done", "purged"}
+        assert sum(e.label == "purged" for e in tasks) == res.tasks_purged
+        rounds = [e for e in evs if e.kind == telemetry.ROUND]
+        purged_rounds = {(e.job, e.round) for e in rounds
+                         if e.label == "purged"}
+        assert purged_rounds                 # some round missed its window
+        # a round span closes fused or purged, never both
+        fused_keys = {(e.job, e.round) for e in evs
+                      if e.kind == telemetry.FUSED}
+        assert not (purged_rounds & fused_keys)
+
+    def test_worker_spans_cover_busy_time(self, backend, bcfg):
+        """Per-worker span durations sum to that worker's busy-seconds
+        counter (the trace is the counter, itemized)."""
+        cfg = bcfg(backend, arrival_rate=60.0, complexity=4.0,
+                   straggler="none", seed=1)
+        res, _ = run_jobs(cfg, 5, K=16, M=4, N=4, verify=False)
+        spans = [e for e in res.trace_events if e.kind == telemetry.TASK]
+        for w, busy in enumerate(res.worker_busy):
+            mine = sum(e.dur for e in spans if e.worker == w)
+            assert mine == pytest.approx(float(busy), rel=0.05, abs=2e-3)
+
+    def test_untraced_run_carries_no_events(self, backend, bcfg):
+        cfg = bcfg(backend, arrival_rate=60.0, complexity=4.0,
+                   straggler="none", trace=False, seed=0)
+        res, _ = run_jobs(cfg, 3, K=16, M=4, N=4, verify=False)
+        assert res.trace_events is None
+        assert res.trace_dropped == 0
+        assert res.tasks_done > 0            # counters still flow untraced
+
+
+class TestSocketClockAlignment:
+    """The cross-host half of the tentpole: remote monotonic clocks land
+    on the master timeline with error bounded by the measured RTT."""
+
+    def test_offsets_bounded_and_reported(self, bcfg):
+        cfg = bcfg("socket", arrival_rate=60.0, complexity=4.0,
+                   straggler="none", seed=0)
+        res, _ = run_jobs(cfg, 5, K=16, M=4, N=4, verify=False)
+        sync = res.clock_sync
+        assert sync is not None and len(sync) == len(MU3)
+        for row in sync:
+            assert row["rtt_s"] is not None and row["rtt_s"] > 0.0
+            # same machine, same monotonic clock: the estimated offset is
+            # pure protocol error, bounded by the loopback RTT
+            assert abs(row["offset_s"]) <= max(row["rtt_s"], 1e-3)
+
+    def test_remote_task_spans_sit_inside_round_spans(self, bcfg):
+        """After rebasing, a worker's task span for round r cannot start
+        before the master dispatched r (up to the alignment error)."""
+        cfg = bcfg("socket", arrival_rate=60.0, complexity=4.0,
+                   straggler="none", seed=0)
+        res, _ = run_jobs(cfg, 5, K=16, M=4, N=4, verify=False)
+        slack = max(max(r["rtt_s"] or 0.0 for r in res.clock_sync), 1e-3)
+        dispatch_at = {(e.job, e.round): e.t for e in res.trace_events
+                       if e.kind == telemetry.DISPATCH}
+        tasks = [e for e in res.trace_events if e.kind == telemetry.TASK]
+        assert tasks
+        for e in tasks:
+            t_disp = dispatch_at.get((e.job, e.round))
+            if t_disp is not None:
+                assert e.t >= t_disp - slack
+
+    def test_metrics_endpoint_serves_live_counters(self):
+        """`runctl serve-worker --metrics-port`: /metrics scrapes reflect
+        the runner's live counters in Prometheus text format."""
+        import urllib.request
+
+        class _Runner:
+            worker_id = 3
+            busy_seconds = 1.25
+            tasks_done = 42
+            tasks_purged = 7
+
+        server, port = telemetry.serve_metrics(
+            lambda: telemetry.worker_metrics_text(_Runner(), sessions=2))
+        try:
+            url = f"http://127.0.0.1:{port}/metrics"
+            body = urllib.request.urlopen(url, timeout=5).read().decode()
+            assert 'repro_worker_tasks_done_total{worker="3"} 42' in body
+            assert 'repro_worker_sessions_total{worker="3"} 2' in body
+            assert 'repro_worker_busy_seconds{worker="3"} 1.250000' in body
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/nope", timeout=5)
+        finally:
+            server.shutdown()

@@ -65,6 +65,33 @@ def _cfg(**kw):
     return RuntimeConfig(**kw)
 
 
+#: backend -> measured res-0 delay (s) in the deadline scenario's stall
+#: regime, deadline-free — cached once per session per backend.
+_ROUND_BASELINE: dict = {}
+
+
+def _round_baseline(backend, bcfg) -> float:
+    """Measure how long one fused round actually takes on this machine.
+
+    The §IV deadline case below needs a deadline that res-0 (one round)
+    comfortably makes and the final resolution (m² rounds) reliably
+    misses.  A fixed constant encodes one machine's speed; on a loaded CI
+    container the same 30 ms can cost res-0 too and flake.  So run the
+    identical stall regime without a deadline and read off the mean
+    res-0 *compute* time — ``layer_compute[:, 0]``, seconds from service
+    start, the same clock the deadline is measured on (delay would also
+    count queueing wait, which the deadline does not) — the natural
+    margin unit for that backend on this host.
+    """
+    if backend not in _ROUND_BASELINE:
+        cfg = bcfg(backend, arrival_rate=14.0, complexity=8.0,
+                   straggler="stall", stall_workers=(2,),
+                   stall_seconds=2.0, seed=1)
+        res, _ = run_jobs(cfg, num_jobs=6, K=64, M=8, N=8)
+        _ROUND_BASELINE[backend] = float(res.layer_compute[:, 0].mean())
+    return _ROUND_BASELINE[backend]
+
+
 def _runtime_worker_threads() -> list[str]:
     return [t.name for t in threading.enumerate()
             if t.name.startswith("runtime-")]
@@ -280,12 +307,19 @@ class TestEndToEndConformance:
         deadline the final resolution misses still releases a correct
         lower resolution, MSB-first delays ordered.
 
-        Thresholds carry slack (res-0 >= 0.9, not == 1.0): a 30 ms
-        wall-clock deadline on a loaded container can cost an occasional
+        The deadline is derived from a measured per-round baseline
+        (:func:`_round_baseline`), not a wall-clock constant: 2.2x the
+        deadline-free res-0 delay sits between one round (res-0, ~1x)
+        and the final resolution (m^2 = 4 rounds, ~4x) whatever the host
+        speed, where a fixed 30 ms flaked on loaded containers.
+
+        Thresholds still carry slack (res-0 >= 0.9, not == 1.0): a tight
+        deadline on a loaded container can cost an occasional
         res-0 — the claim under test is the qualitative §IV gap between
         res-0 and the final resolution, not a hard-real-time guarantee."""
+        deadline = max(0.030, 2.2 * _round_baseline(backend, bcfg))
         cfg = bcfg(backend, arrival_rate=14.0, complexity=8.0,
-                   deadline=0.030, straggler="stall", stall_workers=(2,),
+                   deadline=deadline, straggler="stall", stall_workers=(2,),
                    stall_seconds=2.0, seed=0)
         res, _ = run_jobs(cfg, num_jobs=20, K=64, M=8, N=8, verify=True)
         assert res.terminated.any()
