@@ -38,7 +38,11 @@ import argparse
 import contextlib
 import dataclasses
 import json
+import multiprocessing
+import os
 import pathlib
+import signal
+import threading
 import time
 
 import numpy as np
@@ -189,6 +193,68 @@ def bench_deadline_race(jobs: int) -> dict:
     return r
 
 
+def bench_chaos(jobs: int) -> list[dict]:
+    """Worker-loss regime (docs/fault-tolerance.md): SIGKILL one process
+    worker mid-run, once per fault policy.
+
+    ``degrade`` must absorb the loss — quarantine, geometry refit,
+    re-dispatch — and finish the stream; ``fail-fast`` must fail
+    promptly with the typed error.  Both sides of the fault-policy
+    contract, measured: deadline success under loss for the former,
+    time-to-failure for the latter.
+    """
+    out = []
+    for policy in ("degrade", "fail-fast"):
+        cfg = RuntimeConfig(mu=MU, arrival_rate=12.0, complexity=8.0,
+                            deadline=0.100, straggler="none",
+                            backend="process", fault_policy=policy, seed=5)
+        holder: dict = {}
+
+        def drive(cfg=cfg, holder=holder):
+            t0 = time.perf_counter()
+            try:
+                holder["result"], _ = run_jobs(cfg, jobs, K=64, M=8, N=8)
+            except RuntimeError as e:
+                holder["error"] = type(e).__name__
+            holder["wall"] = time.perf_counter() - t0
+
+        t = threading.Thread(target=drive, daemon=True)
+        t.start()
+        spawn_deadline = time.monotonic() + 20.0
+        procs: dict = {}
+        while time.monotonic() < spawn_deadline and len(procs) < len(MU):
+            procs = {p.name: p for p in multiprocessing.active_children()
+                     if p.name.startswith("runtime-proc-worker-")}
+            time.sleep(0.02)
+        time.sleep(0.5)
+        victim = procs.get("runtime-proc-worker-1")
+        if victim is not None and victim.pid:
+            os.kill(victim.pid, signal.SIGKILL)
+        t.join(120.0)
+        row = {"policy": policy, "jobs": jobs, "scenario": "sigkill-1",
+               "wall_seconds": round(holder.get("wall", float("nan")), 3)}
+        if "result" in holder:
+            res = holder["result"]
+            row.update(
+                outcome="completed",
+                workers_lost=int(res.workers_lost),
+                degraded_jobs=int(res.degraded.sum()
+                                  if res.degraded is not None else 0),
+                success_rate=[round(float(x), 4)
+                              for x in res.success_rate()],
+                fault_events=[e["kind"] for e in (res.fault_log or [])])
+        else:
+            row["outcome"] = holder.get("error", "hung")
+        out.append(row)
+        print(f"[chaos] {policy:>9}: {row['outcome']} in "
+              f"{row['wall_seconds']:.2f} s"
+              + (f", lost {row['workers_lost']}, degraded "
+                 f"{row['degraded_jobs']}, res0 success "
+                 f"{row['success_rate'][0]:.3f}"
+                 if row["outcome"] == "completed" else ""))
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--jobs", type=int, default=120)
@@ -207,6 +273,7 @@ def main(argv=None) -> int:
         "overhead": bench_overhead(args.jobs),
         "regimes": bench_regimes(args.jobs),
         "deadline_race": bench_deadline_race(args.jobs),
+        "chaos": bench_chaos(max(20, args.jobs // 2)),
         "compression": bench_compression(max(10, args.jobs // 4)),
     }
     path = pathlib.Path(args.out)

@@ -37,9 +37,10 @@ import sys
 import numpy as np
 
 from repro.core import simulator
-from repro.runtime import (BACKEND_NAMES, POLICIES, RuntimeConfig,
-                           delay_table, format_controller_trace,
-                           format_delay_table, format_stage_table, run_jobs)
+from repro.runtime import (BACKEND_NAMES, FAULT_POLICIES, POLICIES,
+                           RuntimeConfig, delay_table,
+                           format_controller_trace, format_delay_table,
+                           format_stage_table, run_jobs)
 
 __all__ = ["main", "build_config", "summarize"]
 
@@ -76,7 +77,13 @@ def build_config(args: argparse.Namespace,
         use_jax_devices=args.jax_devices,
         hosts=(hosts if hosts is not None
                else tuple(h for h in args.hosts.split(",") if h)),
-        compress=args.compress, trace=_wants_trace(args), seed=args.seed)
+        compress=args.compress, trace=_wants_trace(args), seed=args.seed,
+        fault_policy=args.fault_policy,
+        heartbeat_interval=args.heartbeat_interval,
+        heartbeat_timeout=args.heartbeat_timeout,
+        reconnect_attempts=args.reconnect_attempts,
+        reconnect_backoff=args.reconnect_backoff,
+        reconnect_backoff_cap=args.reconnect_backoff_cap)
 
 
 def summarize(cfg: RuntimeConfig, result) -> dict:
@@ -102,6 +109,11 @@ def summarize(cfg: RuntimeConfig, result) -> dict:
         "stale_results": int(result.stale_results),
         "tasks_done": int(result.tasks_done),
         "tasks_purged": int(result.tasks_purged),
+        "fault_policy": result.fault_policy,
+        "workers_lost": int(result.workers_lost),
+        "degraded_jobs": (int(result.degraded.sum())
+                          if result.degraded is not None else 0),
+        "fault_log": result.fault_log or [],
         "clock_sync": result.clock_sync,
         "wall_elapsed": float(result.wall_elapsed),
         "stage_seconds": {k: float(v)
@@ -184,6 +196,27 @@ def main(argv=None) -> int:
                     help="socket backend frame compression (auto = "
                          "compress big payloads with the best available "
                          "codec)")
+    ap.add_argument("--fault-policy", choices=FAULT_POLICIES,
+                    default="fail-fast",
+                    help="worker-loss handling: fail-fast raises on any "
+                         "dead worker; degrade quarantines it, "
+                         "re-dispatches its in-flight slice to survivors, "
+                         "and releases at a degraded resolution only when "
+                         "the fleet falls below k (docs/fault-tolerance.md)")
+    ap.add_argument("--heartbeat-interval", type=float, default=1.0,
+                    help="socket backend: seconds between liveness pings")
+    ap.add_argument("--heartbeat-timeout", type=float, default=15.0,
+                    help="socket backend: seconds of silence before a "
+                         "worker host is declared dead")
+    ap.add_argument("--reconnect-attempts", type=int, default=2,
+                    help="socket backend: re-dials before a dropped "
+                         "connection is declared dead")
+    ap.add_argument("--reconnect-backoff", type=float, default=0.05,
+                    help="socket backend: base re-dial backoff in seconds "
+                         "(doubles per attempt, jittered)")
+    ap.add_argument("--reconnect-backoff-cap", type=float, default=2.0,
+                    help="socket backend: ceiling of the exponential "
+                         "re-dial backoff, seconds")
     ap.add_argument("--K", type=int, default=64)
     ap.add_argument("--M", type=int, default=8)
     ap.add_argument("--N", type=int, default=8)
@@ -257,7 +290,7 @@ def _run(args: argparse.Namespace, cfg: RuntimeConfig) -> int:
           f"k={cfg.k} of T={cfg.total_tasks} coded tasks/round, "
           f"{cfg.num_rounds} rounds, L={cfg.num_layers} resolutions, "
           f"straggler={cfg.straggler}, deadline={cfg.deadline}, "
-          f"adapt={cfg.adapt}")
+          f"adapt={cfg.adapt}, fault={cfg.fault_policy}")
     result, _ = run_jobs(cfg, args.jobs, K=args.K, M=args.M, N=args.N,
                          verify=not args.no_verify)
     print(f"[runctl] kappa (eq.1 split): {result.kappa.tolist()}  "
@@ -266,6 +299,14 @@ def _run(args: argparse.Namespace, cfg: RuntimeConfig) -> int:
           f"{result.num_jobs} jobs; release histogram "
           f"(none, res0..): {result.release_histogram().tolist()}; "
           f"stale results: {result.stale_results}")
+    if result.workers_lost or (result.degraded is not None
+                               and result.degraded.any()):
+        kinds = sorted({e["kind"] for e in (result.fault_log or ())})
+        print(f"[runctl] faults ({result.fault_policy} policy): "
+              f"{result.workers_lost} worker(s) lost, "
+              f"{int(result.degraded.sum())} job(s) released degraded; "
+              f"fault log: {len(result.fault_log or ())} events "
+              f"({', '.join(kinds)})")
     if result.verify_errors is not None:
         finite = result.verify_errors[np.isfinite(result.verify_errors)]
         if finite.size:

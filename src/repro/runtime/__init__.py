@@ -21,14 +21,16 @@ from repro.runtime.adaptive import (POLICIES, AIMDPolicy,
                                     DeadlineMarginPolicy, FixedPolicy,
                                     OmegaController, OmegaPolicy,
                                     RoundObservation, margin_ratio)
+from repro.runtime.errors import FusionStateError, TransportDeadError
+from repro.runtime.faults import FaultSupervisor
 from repro.runtime.fusion import FusionNode, LayeredResult, RoundFusion
 from repro.runtime.master import Master, make_jobs, run_jobs
 from repro.runtime.metrics import (STAGES, RuntimeResult, delay_table,
                                    format_controller_trace,
                                    format_delay_table, format_stage_table)
-from repro.runtime.tasks import (BACKEND_NAMES, JobSpec, RoundBatch,
-                                 RoundContext, RuntimeConfig, TaskResult,
-                                 WireBatch)
+from repro.runtime.tasks import (BACKEND_NAMES, FAULT_POLICIES, JobSpec,
+                                 RoundBatch, RoundContext, RuntimeConfig,
+                                 TaskResult, WireBatch)
 from repro.runtime.telemetry import TraceEvent, Tracer
 from repro.runtime.trace_export import (chrome_trace, format_timeline,
                                         jsonl_lines, prometheus_snapshot,
@@ -46,7 +48,8 @@ from repro.runtime.worker import (BatchRunner, StragglerModel, Worker,
 
 __all__ = [
     "RuntimeConfig", "JobSpec", "RoundContext", "RoundBatch", "TaskResult",
-    "WireBatch", "BACKEND_NAMES",
+    "WireBatch", "BACKEND_NAMES", "FAULT_POLICIES",
+    "FaultSupervisor", "TransportDeadError", "FusionStateError",
     "Worker", "WorkerPool", "StragglerModel", "BatchRunner", "make_compute",
     "WorkerTransport", "BACKENDS", "make_transport",
     "FusionNode", "RoundFusion", "LayeredResult",

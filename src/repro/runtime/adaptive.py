@@ -54,7 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Union
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
@@ -359,6 +359,11 @@ class OmegaController:
         self.trace: list[dict] = []
         self.switches = 0
         self.prime_seconds_total = 0.0
+        # fault-supervision state: the surviving fleet the eq. (1) split
+        # runs over (None = everyone), and the omega the fleet forced us
+        # down from (restored when readmissions regrow the fleet)
+        self.active: Optional[tuple[int, ...]] = None
+        self._omega_pre_shrink: Optional[float] = None
 
     @property
     def total_tasks(self) -> int:
@@ -391,7 +396,8 @@ class OmegaController:
             self.code = new_code
             self.code.plan()    # per-geometry DecodePlan: built or reused
             prime = time.perf_counter() - t0
-            self.kappa = self.cfg.load_split(total=new_T)
+            self.kappa = self.cfg.load_split(total=new_T,
+                                             active=self.active)
             self.switches += 1
             self.prime_seconds_total += prime
         self.trace.append({
@@ -402,6 +408,68 @@ class OmegaController:
             "reason": reason, "prime_seconds": prime,
         })
         return switched
+
+    def refit_fleet(self, active: Sequence[int]) -> bool:
+        """Re-split the eq. (1) kappa over a changed surviving fleet.
+
+        The fault supervisor calls this after a quarantine (fleet shrank)
+        or a readmission (fleet grew).  Returns False — and changes
+        nothing — when the surviving fleet fell below the recovery
+        threshold (``len(active) < k``, the ISSUE's fleet-collapse line):
+        the caller must then release at a degraded resolution.
+
+        Geometry rule — shrink proportionally, "if omega allows": the
+        codeword length ``T = ceil(k * omega)`` was provisioned for the
+        FULL fleet's service capacity, so when survivors carry only a
+        fraction of ``sum(mu)`` the effective redundancy is scaled by
+        that same fraction, floored at ``omega = 1`` (``T = k``, the
+        structural minimum — past that there is nothing left to shrink).
+        ``kappa`` is always re-split over the survivors alone (workers
+        legitimately hold multi-task slices — ``T`` may exceed the
+        worker count even at full fleet).  The un-scaled omega is
+        remembered so a readmission that restores capacity restores the
+        geometry with it; a policy retune while shrunk rebases the
+        remembered value the next time the fleet changes.  All moves are
+        traced like policy retunes (``reason`` prefixed ``fleet``).
+        """
+        k = self.cfg.k
+        active = tuple(sorted(set(active)))
+        S = len(active)
+        if S < k:
+            return False
+        full = S >= self.cfg.num_workers
+        self.active = None if full else active
+        base = (self.omega if self._omega_pre_shrink is None
+                else self._omega_pre_shrink)
+        mu = np.asarray(self.cfg.mu, dtype=np.float64)
+        scale = float(mu[list(active)].sum() / mu.sum())
+        new_omega = max(1.0, base * scale)
+        self._omega_pre_shrink = None if full else base
+        old_omega, old_T = self.omega, self.code.num_tasks
+        new_code = self.cfg.code(omega=new_omega)
+        new_T = new_code.num_tasks
+        self.omega = new_omega
+        prime = 0.0
+        switched = new_T != old_T
+        if switched:
+            t0 = time.perf_counter()
+            self.code = new_code
+            self.code.plan()
+            prime = time.perf_counter() - t0
+            self.switches += 1
+            self.prime_seconds_total += prime
+        self.kappa = self.cfg.load_split(total=new_T, active=self.active)
+        self.trace.append({
+            "round": -1, "job": -1,
+            "omega_old": round(old_omega, 4),
+            "omega_new": round(new_omega, 4),
+            "T_old": old_T, "T_new": new_T, "switched": switched,
+            "kappa": [int(x) for x in self.kappa],
+            "reason": f"fleet refit: {S}/{self.cfg.num_workers} workers "
+                      f"active",
+            "prime_seconds": prime,
+        })
+        return True
 
     def summary(self) -> dict:
         """JSON-serializable controller outcome (RuntimeResult.controller)."""

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import coding
 from repro.runtime import telemetry
+from repro.runtime.errors import FusionStateError
 from repro.runtime.tasks import RoundContext, TaskResult
 
 __all__ = ["RoundFusion", "FusionNode", "LayeredResult"]
@@ -47,16 +48,26 @@ class RoundFusion:
         self._lock = threading.Lock()
         self._fused = threading.Event()
         self._ids: list[int] = []
+        self._id_set: set[int] = set()
         self._values: list[np.ndarray] = []
         self._tracer = tracer
         self.fused_at: Optional[float] = None
 
     def post(self, result: TaskResult) -> bool:
-        """Deliver one task result; returns False if stale (late/purged)."""
+        """Deliver one task result; returns False if stale (late/purged).
+
+        Duplicate ``task_id`` deliveries are rejected as stale: a fault-
+        supervised re-dispatch can race the original worker's last-gasp
+        result, and fusing the same codeword index twice would hand the
+        Vandermonde decode a singular arrival set.
+        """
         fused_now = False
         with self._lock:
             if self._fused.is_set() or self.ctx.cancelled:
                 return False
+            if result.task_id in self._id_set:
+                return False
+            self._id_set.add(result.task_id)
             self._ids.append(result.task_id)
             self._values.append(result.value)
             if len(self._ids) == self.k:
@@ -81,7 +92,7 @@ class RoundFusion:
     def decode(self, code: coding.PolynomialCode) -> np.ndarray:
         """Reconstruct the round's mini-job product from the k results."""
         if not self._fused.is_set():
-            raise RuntimeError("round has not fused yet")
+            raise FusionStateError("round has not fused yet")
         return np.asarray(code.decode(self._ids, np.stack(self._values)))
 
 
@@ -180,7 +191,7 @@ class LayeredResult:
         # value *before* setting the event, so a set event is the happens-
         # before edge that makes the read safe against the publisher.
         if not self._events[l].is_set():
-            raise RuntimeError(f"resolution {l} not ready")
+            raise FusionStateError(f"resolution {l} not ready")
         return self._values[l]
 
     def ready_at(self, l: int) -> Optional[float]:
@@ -209,6 +220,6 @@ class LayeredResult:
         """The released (or current best) resolution's value."""
         best = self.best_resolution()
         if best < 0:
-            raise RuntimeError(
+            raise FusionStateError(
                 f"job {self.job_id}: no resolution completed")
         return self.resolution(best)   # event-guarded read

@@ -60,6 +60,7 @@ import numpy as np
 from repro.core import layering
 from repro.runtime import metrics, telemetry
 from repro.runtime.adaptive import OmegaController, RoundObservation
+from repro.runtime.faults import FaultSupervisor
 from repro.runtime.fusion import FusionNode, LayeredResult
 from repro.runtime.tasks import JobSpec, RoundContext, RuntimeConfig
 from repro.runtime.transport import make_transport
@@ -173,6 +174,11 @@ class Master:
                               rng=np.random.default_rng(cfg.seed + 1),
                               tracer=tr)
         pool.start()
+        # the fault authority for this run: under "fail-fast" it is the
+        # historical assert_alive (raises TransportDeadError); under
+        # "degrade" it quarantines, re-dispatches, and decides when a job
+        # must be released degraded — see repro.runtime.faults
+        sup = FaultSupervisor(cfg, pool, ctrl, tracer=tr)
         self._warmup(jobs[0])
 
         arrivals = np.asarray([jb.arrival for jb in jobs])
@@ -181,6 +187,7 @@ class Master:
         layer_compute = np.full((J, L), np.inf)
         success = np.zeros((J, L), dtype=bool)
         terminated = np.zeros(J, dtype=bool)
+        degraded = np.zeros(J, dtype=bool)
         released = np.full(J, -1, dtype=np.int64)
         verify_errors = np.full((J, L), np.nan) if self.verify else None
         futures: list[LayeredResult] = []
@@ -193,8 +200,27 @@ class Master:
         prepared: dict[int, tuple] = {}   # job idx -> pre-decomposed planes
 
         t0 = clock()
+        sup.set_origin(t0)
         try:
             for j, job in enumerate(jobs):
+                if sup.collapsed and sup.check():
+                    # fleet below k and not coming back right now: no
+                    # round can reach k results, so every remaining job
+                    # is released *promptly* — no arrival sleep, no
+                    # dispatch — at its best-ready resolution (nothing,
+                    # for a job that never started), marked degraded
+                    now = clock()
+                    lr = LayeredResult(job.job_id, L)
+                    futures.append(lr)
+                    lr.release(terminated=True)
+                    starts[j] = ends[j] = now - t0
+                    terminated[j] = True
+                    degraded[j] = True
+                    released[j] = lr.released_resolution
+                    if tr is not None:
+                        tr.emit(telemetry.JOB, now, 0.0, job=job.job_id,
+                                label="degraded")
+                    continue
                 wait = (t0 + job.arrival) - clock()
                 if wait > 0:           # idle until the job actually arrives
                     time.sleep(wait)
@@ -286,9 +312,20 @@ class Master:
                 nxt_delays = pool.sample_round_delays(nxt[3])
                 pending = None        # fused-but-undecoded previous round
                 term = False
+                faulted = False       # released by the fault supervisor
                 for ridx, (l, pi, pj) in enumerate(order):
                     if t_term is not None and clock() >= t_term:
                         term = True   # don't dispatch a dead round
+                        break
+                    # per-round liveness gate: when rounds fuse fast the
+                    # wait loops below may never time out, so a death
+                    # would otherwise go undetected while dispatches pile
+                    # buffers onto the corpse — fail-fast raises here,
+                    # degrade quarantines and re-splits kappa before the
+                    # next dispatch (True only on fleet collapse: there
+                    # is no in-flight round to give up on at this point)
+                    if sup.check():
+                        faulted = term = True
                         break
                     ctx = RoundContext(job.job_id, ridx)
                     rf = self.fusion.begin_round(ctx, cfg.k)
@@ -296,6 +333,9 @@ class Master:
                     ts = t_disp = clock()
                     pool.submit_round(ctx, nxt[0], nxt[1], nxt[3],
                                       delays=nxt_delays)
+                    # hand the supervisor the round's buffers + split so a
+                    # worker death mid-round can re-dispatch the lost slice
+                    sup.track_round(ctx, nxt[0], nxt[1], nxt[3], rf)
                     stage["dispatch"] += clock() - ts
                     rounds_timed += 1
                     global_round += 1
@@ -325,12 +365,16 @@ class Master:
                     ts = clock()
                     if t_term is None:
                         # unbounded wait: slice it so a worker that died
-                        # (OOM-kill, crashed child, dead remote host)
-                        # raises promptly via the transport's liveness
-                        # check instead of blocking the run forever on a
-                        # round that can no longer reach k results
-                        while not (fused := rf.wait(5.0)):
-                            pool.assert_alive()
+                        # (OOM-kill, crashed child, dead remote host) is
+                        # handled promptly — fail-fast raises out of
+                        # sup.check(); degrade quarantines/re-dispatches,
+                        # returning True only when the round is beyond
+                        # saving — instead of blocking the run forever on
+                        # a round that can no longer reach k results
+                        while not (fused := rf.wait(sup.wait_slice)):
+                            if sup.check():
+                                faulted = True
+                                break
                     else:
                         # bounded wait: still slice it — a multi-second
                         # §IV deadline must not delay dead-host detection
@@ -341,9 +385,17 @@ class Master:
                             if remaining <= 0.0:
                                 fused = rf.wait(0.0)
                                 break
-                            if (fused := rf.wait(min(remaining, 5.0))):
+                            if (fused := rf.wait(min(remaining,
+                                                     sup.wait_slice))):
                                 break
-                            pool.assert_alive()
+                            if sup.check():
+                                faulted = True
+                                break
+                    if faulted and rf.wait(0.0):
+                        # the round fused in the window between the wait
+                        # timing out and the supervisor giving up on it —
+                        # a completed round is never thrown away
+                        fused, faulted = True, False
                     tw = clock()
                     stage["wait"] += tw - ts
                     if tr is not None:
@@ -385,11 +437,13 @@ class Master:
                 if tr is not None:
                     tr.emit(telemetry.JOB, start, end - start,
                             job=job.job_id,
-                            label="terminated" if term else "completed")
+                            label=("degraded" if faulted else
+                                   "terminated" if term else "completed"))
 
                 starts[j] = start - t0
                 ends[j] = end - t0
                 terminated[j] = term
+                degraded[j] = faulted
                 released[j] = lr.released_resolution
                 for l in range(L):
                     if lr.resolution_ready(l):
@@ -422,6 +476,8 @@ class Master:
             omega_trace=list(ctrl.trace), backend=pool.name,
             transport_stats=transport_stats,
             tasks_done=pool.tasks_done, tasks_purged=pool.tasks_purged,
+            fault_policy=cfg.fault_policy, fault_log=sup.fault_log,
+            workers_lost=sup.workers_lost, degraded=degraded,
             trace_events=(tr.events() if tr is not None else None),
             trace_dropped=(tr.dropped if tr is not None else 0),
             trace_t0=t0,

@@ -69,6 +69,21 @@ class RuntimeResult(simulator.SimResult):
     ``tasks_done``       coded tasks computed and emitted across all
                          workers (exact: collected post-shutdown).
     ``tasks_purged``     tasks reclaimed by purges before completion.
+    ``fault_policy``     the worker-loss policy the run executed under
+                         (``fail-fast`` / ``degrade``).
+    ``fault_log``        chronological fault-supervision record: one dict
+                         per quarantine / readmit / redispatch /
+                         fleet-collapse event (``t`` seconds from run
+                         start, ``kind``, per-kind fields) — see
+                         :mod:`repro.runtime.faults`.  Empty when no
+                         worker was lost.
+    ``workers_lost``     distinct worker deaths the supervisor handled
+                         (a readmitted-then-lost-again socket host
+                         counts once per death).
+    ``degraded``         (J,) bool: job was released by the fault
+                         supervisor (fleet collapse or re-dispatch
+                         budget exhausted) rather than finishing or
+                         hitting the ordinary §IV deadline rule.
     ``trace_events``     time-sorted :class:`~repro.runtime.telemetry.
                          TraceEvent` list when the run traced
                          (``cfg.trace=True``); None otherwise.  Remote
@@ -103,6 +118,10 @@ class RuntimeResult(simulator.SimResult):
     transport_stats: dict | None = None
     tasks_done: int = 0
     tasks_purged: int = 0
+    fault_policy: str = "fail-fast"
+    fault_log: list | None = None
+    workers_lost: int = 0
+    degraded: np.ndarray | None = None
     trace_events: list | None = None
     trace_dropped: int = 0
     trace_t0: float = 0.0

@@ -35,11 +35,19 @@ import numpy as np
 from repro.core import coding, layering, scheduling
 
 __all__ = ["RuntimeConfig", "JobSpec", "RoundContext", "RoundBatch",
-           "TaskResult", "WireBatch", "BACKEND_NAMES", "COMPRESS_MODES"]
+           "TaskResult", "WireBatch", "BACKEND_NAMES", "COMPRESS_MODES",
+           "FAULT_POLICIES"]
 
 #: Worker-transport backends the runtime can dispatch over (see
 #: :mod:`repro.runtime.transport`).
 BACKEND_NAMES = ("thread", "process", "jax", "socket")
+
+#: Worker-loss policies (see :mod:`repro.runtime.faults`): ``fail-fast``
+#: raises :class:`~repro.runtime.errors.TransportDeadError` on the first
+#: dead worker; ``degrade`` quarantines it, re-dispatches its lost tasks
+#: to survivors, and releases jobs at a degraded resolution when the
+#: fleet drops below the recovery threshold ``k``.
+FAULT_POLICIES = ("fail-fast", "degrade")
 
 #: Result/batch compression modes for the socket transport's frame
 #: protocol (see :mod:`repro.runtime.transport.socket_host`): ``auto``
@@ -90,6 +98,12 @@ class RuntimeConfig:
     use_jax_devices: bool = False  # legacy alias for backend="jax"
     hosts: tuple[str, ...] = ()    # socket backend: "host:port" per worker
     compress: str = "auto"         # socket frame codec: COMPRESS_MODES key
+    fault_policy: str = "fail-fast"   # worker loss: FAULT_POLICIES key
+    heartbeat_interval: float = 1.0   # socket: seconds between pings
+    heartbeat_timeout: float = 15.0   # socket: silence -> worker dead
+    reconnect_attempts: int = 2       # socket: re-dials before giving up
+    reconnect_backoff: float = 0.05   # socket: base re-dial backoff (s)
+    reconnect_backoff_cap: float = 2.0  # socket: exp backoff ceiling (s)
     trace: bool = False            # structured tracing (telemetry module);
     #                                off by default and free when off
     seed: int = 0
@@ -127,6 +141,24 @@ class RuntimeConfig:
             raise ValueError(
                 f"hosts= is only meaningful with backend='socket' "
                 f"(got backend={self.backend!r})")
+        if self.fault_policy not in FAULT_POLICIES:
+            raise ValueError(f"unknown fault policy {self.fault_policy!r}; "
+                             f"known: {FAULT_POLICIES}")
+        if self.heartbeat_interval <= 0.0:
+            raise ValueError(f"heartbeat_interval must be > 0, got "
+                             f"{self.heartbeat_interval}")
+        if self.heartbeat_timeout <= self.heartbeat_interval:
+            raise ValueError(
+                f"heartbeat_timeout ({self.heartbeat_timeout}) must exceed "
+                f"heartbeat_interval ({self.heartbeat_interval}): a timeout "
+                f"shorter than one ping period declares every worker dead")
+        if self.reconnect_attempts < 0:
+            raise ValueError(f"reconnect_attempts must be >= 0, got "
+                             f"{self.reconnect_attempts}")
+        if not 0.0 < self.reconnect_backoff <= self.reconnect_backoff_cap:
+            raise ValueError(
+                f"need 0 < reconnect_backoff <= reconnect_backoff_cap, got "
+                f"{self.reconnect_backoff} / {self.reconnect_backoff_cap}")
         if self.omega < 1.0:
             raise ValueError(f"redundancy ratio must be >= 1, got {self.omega}")
         if any(not 0 <= w < len(self.mu) for w in self.stall_workers):
@@ -193,18 +225,40 @@ class RuntimeConfig:
             complexity=self.complexity, m=self.m, omega=self.omega,
             gamma=self.gamma)
 
-    def load_split(self, total: Optional[int] = None) -> np.ndarray:
+    def load_split(self, total: Optional[int] = None,
+                   active: Optional[tuple[int, ...]] = None) -> np.ndarray:
         """Eq. (1) integer task split kappa_p over workers (sum == total).
 
         ``total`` defaults to the configured ``total_tasks``; the adaptive
         controller passes a retuned codeword length instead, recomputing
         the split for the new ``T`` against the same worker moments.
+
+        ``active`` restricts the split to a surviving subset of workers
+        (the fault supervisor's quarantine path): the eq. (1) optimization
+        runs over the survivors' moments only, and every non-active worker
+        gets ``kappa_p = 0``.  The returned vector always has
+        ``num_workers`` entries so transport indexing is unchanged.
         """
-        stats = [scheduling.worker_job_moments(mu, self.k,
+        if active is None:
+            active = tuple(range(self.num_workers))
+        else:
+            active = tuple(sorted(set(active)))
+            if not active:
+                raise ValueError("load_split needs at least one active "
+                                 "worker")
+            if any(not 0 <= p < self.num_workers for p in active):
+                raise ValueError(f"active workers {active} out of range "
+                                 f"for {self.num_workers} workers")
+        stats = [scheduling.worker_job_moments(self.mu[p], self.k,
                                                self.minijob_complexity)
-                 for mu in self.mu]
-        return scheduling.load_split(
+                 for p in active]
+        sub = scheduling.load_split(
             stats, self.total_tasks if total is None else total, self.gamma)
+        if len(active) == self.num_workers:
+            return sub
+        kappa = np.zeros(self.num_workers, dtype=sub.dtype)
+        kappa[list(active)] = sub
+        return kappa
 
 
 @dataclasses.dataclass(frozen=True)

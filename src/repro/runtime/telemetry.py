@@ -48,7 +48,8 @@ __all__ = [
     "TraceEvent", "Tracer", "EVENT_KINDS", "SPAN_KINDS", "INSTANT_KINDS",
     "PREP", "ENCODE", "DISPATCH", "ROUND", "DECODE", "RESOLUTION", "JOB",
     "RETUNE", "TASK", "RESULT", "FUSED", "STALE", "HEARTBEAT", "RECONNECT",
-    "DEAD", "serve_metrics", "worker_metrics_text",
+    "DEAD", "QUARANTINE", "READMIT", "REDISPATCH", "serve_metrics",
+    "worker_metrics_text",
 ]
 
 clock = time.monotonic
@@ -75,10 +76,18 @@ TASK = "task"              # span: delay wait + compute; label done|purged,
 HEARTBEAT = "hb"           # instant: pong received; value = RTT (seconds)
 RECONNECT = "reconnect"    # instant: link re-established after a drop
 DEAD = "dead"              # instant: worker declared dead; label = reason
+# Fault supervision (degrade policy, repro.runtime.faults):
+QUARANTINE = "quarantine"  # instant: dead worker removed from the fleet;
+#                            label = death reason
+READMIT = "readmit"        # instant: quarantined worker rejoined (socket
+#                            reconnect + hello/watermark resync)
+REDISPATCH = "redispatch"  # instant: a lost slice re-sent to a survivor;
+#                            value = task count, worker = new owner
 
 SPAN_KINDS = frozenset({PREP, ENCODE, ROUND, DECODE, JOB, TASK})
 INSTANT_KINDS = frozenset({DISPATCH, RESOLUTION, RETUNE, RESULT, FUSED,
-                           STALE, HEARTBEAT, RECONNECT, DEAD})
+                           STALE, HEARTBEAT, RECONNECT, DEAD, QUARANTINE,
+                           READMIT, REDISPATCH})
 EVENT_KINDS = SPAN_KINDS | INSTANT_KINDS
 
 

@@ -57,6 +57,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.runtime import telemetry
+from repro.runtime.errors import TransportDeadError
 from repro.runtime.tasks import RoundContext, RuntimeConfig, TaskResult
 
 __all__ = ["StragglerModel", "WorkerTransport"]
@@ -149,6 +150,11 @@ class WorkerTransport(abc.ABC):
         self.straggler = StragglerModel(
             cfg, rng if rng is not None else np.random.default_rng(cfg.seed))
         self._seq = 0
+        #: Workers removed from the active fleet by the fault supervisor
+        #: (degrade policy).  A quarantined worker receives no further
+        #: slices; its liveness state stays reported via
+        #: :meth:`dead_worker_map` so accounting never loses the death.
+        self.quarantined: set[int] = set()
 
     def sample_round_delays(self, kappa: np.ndarray) -> list[np.ndarray]:
         """Master-side per-worker injected-delay vectors for one round.
@@ -179,7 +185,12 @@ class WorkerTransport(abc.ABC):
             hi = lo + int(kappa[p])
             if lo == hi:
                 continue
-            self._send_slice(p, ctx, lo, X[lo:hi], Y[lo:hi], delays[p])
+            # a quarantined worker's slice is withheld, not sent into the
+            # void: the fault supervisor sees the round's kappa and
+            # re-dispatches exactly these tasks to survivors (a stale
+            # buffered round can carry a pre-death split)
+            if p not in self.quarantined:
+                self._send_slice(p, ctx, lo, X[lo:hi], Y[lo:hi], delays[p])
             lo = hi
 
     @abc.abstractmethod
@@ -192,9 +203,19 @@ class WorkerTransport(abc.ABC):
     def start(self) -> None:
         """Bring up the workers; must be called before any submit."""
 
+    def dead_worker_map(self) -> dict[int, str]:
+        """``worker_id -> description`` of unexpectedly-dead workers.
+
+        The structured liveness report: quarantined workers stay listed
+        (their death is a fact), and it is the fault supervisor's job to
+        remember which deaths it already handled.  Backends override
+        this; the default (no liveness tracking) reports nothing.
+        """
+        return {}
+
     def _dead_workers(self) -> list[str]:
         """Names of workers that died *unexpectedly* (not stopping)."""
-        return []
+        return [desc for _, desc in sorted(self.dead_worker_map().items())]
 
     def assert_alive(self) -> None:
         """Raise if any worker died outside an orderly shutdown.
@@ -203,13 +224,63 @@ class WorkerTransport(abc.ABC):
         process OOM-killed (or a worker thread killed by an unexpected
         exception) while holding more than ``T - k`` of a round's tasks
         would otherwise leave the round unable to fuse and the run
-        blocked forever.  Turning that into a prompt error is the
-        contract; backends report deaths via :meth:`_dead_workers`.
+        blocked forever.  Turning that into a prompt
+        :class:`~repro.runtime.errors.TransportDeadError` is the
+        ``fail-fast`` contract; backends report deaths via
+        :meth:`dead_worker_map`.  Under ``fault_policy="degrade"`` the
+        fault supervisor consults :meth:`dead_worker_map` directly and
+        quarantines instead of calling this.
         """
         dead = self._dead_workers()
         if dead:
-            raise RuntimeError(
-                f"{self.name} transport: worker(s) died mid-run: {dead}")
+            raise TransportDeadError(
+                f"{self.name} transport: worker(s) died mid-run: {dead}",
+                workers=dead)
+
+    # -- fault-supervision hooks (degrade policy) -----------------------------
+    @property
+    def active_workers(self) -> list[int]:
+        """Worker ids still in the dispatch fleet (not quarantined)."""
+        return [p for p in range(self._cfg.num_workers)
+                if p not in self.quarantined]
+
+    def quarantine(self, worker_id: int, reason: str) -> None:
+        """Remove one dead worker from the active fleet (idempotent).
+
+        Subsequent :meth:`submit_round` calls withhold the worker's
+        slice; backends additionally tear down their side of the worker
+        (:meth:`_quarantine_worker`) so a half-dead peer cannot wedge
+        shutdown.
+        """
+        if worker_id in self.quarantined:
+            return
+        self.quarantined.add(worker_id)
+        self._quarantine_worker(worker_id, reason)
+        if self._tracer is not None:
+            self._tracer.emit(telemetry.QUARANTINE, clock(),
+                              worker=worker_id, label=reason)
+
+    def _quarantine_worker(self, worker_id: int, reason: str) -> None:
+        """Backend-specific quarantine teardown (default: nothing)."""
+
+    def resend_slice(self, worker_id: int, ctx: RoundContext,
+                     first_task: int, x: np.ndarray, y: np.ndarray,
+                     delays: np.ndarray) -> None:
+        """Re-dispatch a lost slice of an in-flight round to a survivor.
+
+        The fault supervisor's re-dispatch hop: same delivery path as
+        :meth:`submit_round`'s slices (``ctx.seq`` is already stamped),
+        addressed to a surviving worker of the supervisor's choosing.
+        """
+        self._send_slice(worker_id, ctx, first_task, x, y, delays)
+
+    def try_readmit(self) -> list[int]:
+        """Attempt to re-establish quarantined workers; returns the ids
+        readmitted (removed from quarantine).  Only backends with a
+        reconnect path (socket) can ever readmit; the default is none —
+        a dead thread or process does not come back.
+        """
+        return []
 
     @abc.abstractmethod
     def purge_round(self, ctx: RoundContext) -> None:

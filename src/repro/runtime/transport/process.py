@@ -178,8 +178,23 @@ class _WorkerLoop:
         self._results.put(stats)
 
 
+#: Fork-start handoff: every pipe of the transport being started, so each
+#: child can close its *siblings'* inherited ends.  Without this, a
+#: SIGKILLed worker's pipe keeps open read ends in every sibling process,
+#: the master never sees EPIPE, and a send to the corpse blocks forever
+#: once the kernel buffer fills — the exact hang the fault supervisor
+#: exists to prevent.  Under spawn the module is re-imported (global is
+#: None) and nothing is inherited anyway.
+_FORK_CONNS: Optional[list] = None
+
+
 def _worker_main(worker_id: int, cfg: RuntimeConfig, conn, results) -> None:
     """Child-process entrypoint (module-level: picklable under spawn)."""
+    if _FORK_CONNS is not None:
+        for parent, child in _FORK_CONNS:
+            parent.close()
+            if child is not conn:
+                child.close()
     try:
         _WorkerLoop(worker_id, cfg, conn, results).run()
     except (EOFError, BrokenPipeError, KeyboardInterrupt):
@@ -231,8 +246,13 @@ class ProcessTransport(WorkerTransport):
 
     # -- master side ---------------------------------------------------------
     def start(self) -> None:
-        for proc in self.processes:
-            proc.start()
+        global _FORK_CONNS
+        _FORK_CONNS = self._conns
+        try:
+            for proc in self.processes:
+                proc.start()
+        finally:
+            _FORK_CONNS = None
         for _, child in self._conns:
             child.close()        # parent keeps only its end of each pipe
         self._drainer.start()
@@ -245,12 +265,33 @@ class ProcessTransport(WorkerTransport):
         wire = WireBatch(seq=ctx.seq, job_id=ctx.job_id,
                          round_idx=ctx.round_idx, first_task_id=first_task,
                          x=x, y=y, delays=delays)
-        self._conns[worker_id][0].send(("round", wire))
+        try:
+            self._conns[worker_id][0].send(("round", wire))
+        except (BrokenPipeError, OSError):
+            # worker died under us: drop the slice, like the socket
+            # backend — redundancy may still fuse the round, and the
+            # next liveness check reports the death either way
+            pass
 
-    def _dead_workers(self) -> list[str]:
+    def dead_worker_map(self) -> dict[int, str]:
         if not self._started or self._shutting_down:
-            return []
-        return [p.name for p in self.processes if not p.is_alive()]
+            return {}
+        return {p: f"{proc.name} (exit code {proc.exitcode})"
+                for p, proc in enumerate(self.processes)
+                if not proc.is_alive()}
+
+    def _quarantine_worker(self, worker_id: int, reason: str) -> None:
+        """Retire a dead worker process: reap it and close the master's
+        pipe end so shutdown cannot block on a corpse.  Its final stats
+        envelope is lost with it — the fault log records the loss."""
+        proc = self.processes[worker_id]
+        if proc.is_alive():      # defensive: quarantine targets the dead
+            proc.terminate()
+        proc.join(timeout=1.0)
+        try:
+            self._conns[worker_id][0].close()
+        except OSError:          # pragma: no cover - already closed
+            pass
 
     def purge_round(self, ctx: RoundContext) -> None:
         ctx.purge()              # master side: fusion drops stale results

@@ -66,6 +66,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import pathlib
+import random
 import select
 import socket
 import struct
@@ -540,7 +541,7 @@ class _WorkerLink:
         if self.dead or self.transport._shutting_down:
             return False
         old = self.conn
-        for _ in range(self.transport.reconnect_attempts):
+        for attempt in range(self.transport.reconnect_attempts):
             try:
                 self.conn = self._dial(self.transport.reconnect_timeout)
                 self._hello()
@@ -555,7 +556,12 @@ class _WorkerLink:
                             worker=self.worker_id, label=why)
                 return True
             except (OSError, ConnectionError, EOFError):
-                time.sleep(self.transport.reconnect_backoff)
+                # exponential backoff with jitter: a whole fleet re-dialing
+                # a restarted host in lockstep (every link dropped at the
+                # same instant) must not thundering-herd it
+                delay = min(self.transport.reconnect_backoff_cap,
+                            self.transport.reconnect_backoff * (2 ** attempt))
+                time.sleep(delay * random.uniform(0.5, 1.5))
         self.mark_dead(f"connection lost ({why}); reconnect failed after "
                        f"{self.transport.reconnect_attempts} attempts")
         return False
@@ -689,21 +695,33 @@ class SocketTransport(WorkerTransport):
                  rng: Optional[np.random.Generator] = None,
                  tracer=None, *,
                  connect_timeout: float = 30.0,
-                 heartbeat_interval: float = 1.0,
-                 heartbeat_timeout: float = 15.0,
-                 reconnect_attempts: int = 2,
+                 heartbeat_interval: Optional[float] = None,
+                 heartbeat_timeout: Optional[float] = None,
+                 reconnect_attempts: Optional[int] = None,
                  reconnect_timeout: float = 1.0,
-                 reconnect_backoff: float = 0.05):
+                 reconnect_backoff: Optional[float] = None,
+                 reconnect_backoff_cap: Optional[float] = None):
         super().__init__(cfg, sink, rng, tracer)
         if cfg.compress == "lz4" and not have_lz4():
             raise ValueError("compress='lz4' but lz4 is not installed; "
                              "use 'zlib' or 'auto'")
+        # liveness knobs default from the RuntimeConfig (runctl-settable);
+        # explicit kwargs still override for tests that tighten one knob
+        def _knob(kwarg, cfg_value):
+            return cfg_value if kwarg is None else kwarg
         self.connect_timeout = connect_timeout
-        self.heartbeat_interval = heartbeat_interval
-        self.heartbeat_timeout = heartbeat_timeout
-        self.reconnect_attempts = reconnect_attempts
+        self.heartbeat_interval = _knob(heartbeat_interval,
+                                        cfg.heartbeat_interval)
+        self.heartbeat_timeout = _knob(heartbeat_timeout,
+                                       cfg.heartbeat_timeout)
+        self.reconnect_attempts = _knob(reconnect_attempts,
+                                        cfg.reconnect_attempts)
         self.reconnect_timeout = reconnect_timeout
-        self.reconnect_backoff = reconnect_backoff
+        self.reconnect_backoff = _knob(reconnect_backoff,
+                                       cfg.reconnect_backoff)
+        self.reconnect_backoff_cap = _knob(reconnect_backoff_cap,
+                                           cfg.reconnect_backoff_cap)
+        self._retired_link_stats = np.zeros(6, dtype=np.int64)
         self._session = uuid.uuid4().hex
         self._watermark = -1          # highest purged dispatch seq
         self._busy = np.zeros(cfg.num_workers)
@@ -783,11 +801,47 @@ class SocketTransport(WorkerTransport):
                     continue
                 link.send(("ping", clock()))
 
-    def _dead_workers(self) -> list[str]:
+    def dead_worker_map(self) -> dict[int, str]:
         if not self._started or self._shutting_down:
-            return []
-        return [f"socket-worker-{ln.worker_id}@{ln.host}:{ln.port} "
-                f"({ln.dead})" for ln in self.links if ln.dead is not None]
+            return {}
+        return {ln.worker_id: f"socket-worker-{ln.worker_id}@"
+                              f"{ln.host}:{ln.port} ({ln.dead})"
+                for ln in self.links if ln.dead is not None}
+
+    def _quarantine_worker(self, worker_id: int, reason: str) -> None:
+        """Close the dead link (idempotent); its host may later come back
+        through :meth:`try_readmit`'s fresh dial + hello resync."""
+        self.links[worker_id].mark_dead(reason)
+
+    def try_readmit(self) -> list[int]:
+        """One quick re-dial pass over quarantined workers.
+
+        A restarted (or revived) host accepts the dial; the fresh link's
+        hello carries the run's session id and the authoritative purge
+        watermark, so the host resumes (kept state) or starts clean with
+        every purged round already dropped (lost state) — the same resync
+        contract as a mid-run reconnect.  Unreachable hosts cost one
+        short dial timeout each, so the caller rate-limits this.
+        """
+        readmitted = []
+        for p in sorted(self.quarantined):
+            old = self.links[p]
+            link = _WorkerLink(self, p, f"{old.host}:{old.port}")
+            try:
+                link.connect(timeout=0.25)
+            except (ConnectionError, OSError, EOFError, FrameError):
+                if link.conn is not None:
+                    link.conn.close()
+                continue
+            link.sync_clock(samples=2)
+            link.receiver.start()
+            # the retiring link's byte counters must survive replacement
+            self._retired_link_stats += old.stats_tuple()
+            old.mark_dead("superseded by readmitted link")
+            self.links[p] = link
+            self.quarantined.discard(p)
+            readmitted.append(p)
+        return readmitted
 
     # -- dispatch / purge -----------------------------------------------------
     def _send_slice(self, worker_id: int, ctx: RoundContext, first_task: int,
@@ -856,7 +910,7 @@ class SocketTransport(WorkerTransport):
         compression); ``compression_ratio`` is raw/wire on that path
         (1.0 = incompressible or compression off).
         """
-        total = np.zeros(6, dtype=np.int64)
+        total = self._retired_link_stats.copy()
         for link in self.links:
             total += link.stats_tuple()
         frames_out, raw_out, bytes_out, frames_in, raw_in, wire_in = (
@@ -913,48 +967,82 @@ class LocalCluster:
     def __init__(self, num_workers: int, *, host: str = "127.0.0.1",
                  spawn_timeout: float = 60.0):
         self.host = host
+        self.spawn_timeout = spawn_timeout
         self.processes: list[subprocess.Popen] = []
         self.hosts: tuple[str, ...] = ()
         src_root = pathlib.Path(__file__).resolve().parents[3]
-        env = dict(os.environ)
-        env["PYTHONPATH"] = (str(src_root) + os.pathsep
-                             + env.get("PYTHONPATH", ""))
+        self._env = dict(os.environ)
+        self._env["PYTHONPATH"] = (str(src_root) + os.pathsep
+                                   + self._env.get("PYTHONPATH", ""))
         ports = []
         try:
             for _ in range(num_workers):
-                proc = subprocess.Popen(
-                    [sys.executable, "-m", "repro.launch.worker_host",
-                     "--host", host, "--port", "0"],
-                    stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
-                    env=env, text=True)
-                self.processes.append(proc)
+                self.processes.append(self._spawn(0))
             deadline = clock() + spawn_timeout
             for proc in self.processes:
-                # select before readline: a wedged host that never prints
-                # its announce line must trip spawn_timeout, not block the
-                # constructor forever (the announce is a single flushed
-                # line, so once readable it arrives whole)
-                ready, _, _ = select.select(
-                    [proc.stdout], [], [], max(0.0, deadline - clock()))
-                if not ready:
-                    raise RuntimeError(
-                        f"worker host did not announce within "
-                        f"{spawn_timeout}s (exit code {proc.poll()})")
-                line = proc.stdout.readline()
-                if not line.startswith("LISTENING"):
-                    raise RuntimeError(
-                        f"worker host failed to start (said {line!r}, "
-                        f"exit code {proc.poll()})")
-                ports.append(int(line.split()[2]))
+                ports.append(self._await_announce(proc, deadline))
             self.hosts = tuple(f"{host}:{p}" for p in ports)
         except BaseException:
             self.close()
             raise
 
+    def _spawn(self, port: int) -> subprocess.Popen:
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.worker_host",
+             "--host", self.host, "--port", str(port)],
+            stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+            env=self._env, text=True)
+
+    def _await_announce(self, proc: subprocess.Popen,
+                        deadline: float) -> int:
+        """Parse one host's ``LISTENING`` line; returns its bound port.
+
+        ``select`` before ``readline``: a wedged host that never prints
+        its announce line must trip the timeout, not block forever (the
+        announce is a single flushed line, so once readable it arrives
+        whole).
+        """
+        ready, _, _ = select.select(
+            [proc.stdout], [], [], max(0.0, deadline - clock()))
+        if not ready:
+            raise RuntimeError(
+                f"worker host did not announce within "
+                f"{self.spawn_timeout}s (exit code {proc.poll()})")
+        line = proc.stdout.readline()
+        if not line.startswith("LISTENING"):
+            raise RuntimeError(
+                f"worker host failed to start (said {line!r}, "
+                f"exit code {proc.poll()})")
+        return int(line.split()[2])
+
     def kill(self, index: int) -> None:
         """SIGKILL one worker host (the dead-node fault injection)."""
         self.processes[index].kill()
         self.processes[index].wait(timeout=10.0)
+
+    def revive(self, index: int) -> None:
+        """Restart a killed worker host on its original port.
+
+        The chaos suite's recovery injection: the revived host is a fresh
+        process with no session state, reachable at the same
+        ``host:port`` the master was configured with — exactly the
+        restart the transport's readmission path (re-dial + hello/
+        watermark resync) exists for.
+        """
+        old = self.processes[index]
+        if old.poll() is None:
+            raise RuntimeError(f"worker host {index} is still alive; "
+                               f"kill it before reviving")
+        if old.stdout is not None:
+            old.stdout.close()
+        port = int(self.hosts[index].rpartition(":")[2])
+        proc = self._spawn(port)
+        try:
+            self._await_announce(proc, clock() + self.spawn_timeout)
+        except BaseException:
+            proc.terminate()
+            raise
+        self.processes[index] = proc
 
     def close(self) -> None:
         for proc in self.processes:

@@ -355,10 +355,25 @@ class WorkerPool(WorkerTransport):
             w.start()
         self._started = True
 
-    def _dead_workers(self) -> list[str]:
+    def dead_worker_map(self) -> dict[int, str]:
         if not self._started or self._shutting_down:
-            return []
-        return [w.name for w in self.workers if not w.is_alive()]
+            return {}
+        return {w.worker_id: w.name for w in self.workers
+                if not w.is_alive()}
+
+    def _quarantine_worker(self, worker_id: int, reason: str) -> None:
+        """Retire a dead worker thread: purge-count its orphaned queue so
+        the task accounting stays exact, and make sure a (somehow) still-
+        running thread stops instead of computing for a fleet that no
+        longer includes it."""
+        w = self.workers[worker_id]
+        if w.is_alive():
+            w.stop()         # purge mode: counts its own queue on exit
+            return
+        with w._cv:          # dead thread: count what it left behind
+            for b in w._queue:
+                w.runner.count_purged(b)
+            w._queue.clear()
 
     def _send_slice(self, worker_id: int, ctx: RoundContext, first_task: int,
                     x: np.ndarray, y: np.ndarray,

@@ -49,8 +49,8 @@ def resolve(dotted: str):
 def test_docs_exist_and_carry_anchors():
     files = doc_files()
     names = {p.name for p in files}
-    assert {"paper-map.md", "architecture.md",
-            "adaptive-omega.md", "observability.md"} <= names, names
+    assert {"paper-map.md", "architecture.md", "adaptive-omega.md",
+            "observability.md", "fault-tolerance.md"} <= names, names
     assert anchors_in(DOCS / "paper-map.md"), \
         "paper-map.md lost its code anchors"
 
@@ -81,5 +81,6 @@ def test_paper_map_covers_the_load_bearing_surface():
             "repro.runtime.adaptive.OmegaController",
             "repro.runtime.telemetry.Tracer",
             "repro.runtime.trace_export.chrome_trace",
+            "repro.runtime.faults.FaultSupervisor",
     ):
         assert required in text, f"paper-map.md no longer maps {required}"

@@ -23,6 +23,8 @@ container's timer.
 
 import dataclasses
 import multiprocessing
+import os
+import signal
 import threading
 import time
 
@@ -31,10 +33,14 @@ import pytest
 
 from repro.core import simulator
 from repro.runtime import (BACKENDS, FusionNode, RoundContext, RuntimeConfig,
-                           TaskResult, WireBatch, make_transport, run_jobs)
+                           TaskResult, TransportDeadError, WireBatch,
+                           make_transport, run_jobs)
 from repro.runtime.transport.socket_host import LocalCluster
 
 MU3 = (400.0, 650.0, 380.0)
+#: five-worker fleet for the degrade-policy scenarios: k = 4, so one
+#: SIGKILL is the ISSUE's "n - k workers" budget and two drop below k.
+MU5 = (400.0, 650.0, 380.0, 420.0, 390.0)
 BACKENDS_FULL = ("thread", "process", "socket")
 
 
@@ -90,6 +96,48 @@ def _round_baseline(backend, bcfg) -> float:
         res, _ = run_jobs(cfg, num_jobs=6, K=64, M=8, N=8)
         _ROUND_BASELINE[backend] = float(res.layer_compute[:, 0].mean())
     return _ROUND_BASELINE[backend]
+
+
+def _await_worker_processes(n, timeout=20.0) -> dict:
+    """Wait for the master's ``n`` spawned worker processes; returns
+    ``{worker_id: Process}`` so fault injection can pick its victim."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        procs = [p for p in multiprocessing.active_children()
+                 if p.name.startswith("runtime-proc-worker-")]
+        if len(procs) >= n:
+            return {int(p.name.rsplit("-", 1)[1]): p for p in procs}
+        time.sleep(0.02)
+    pytest.fail(f"{n} worker processes never appeared")
+
+
+def _run_with_faults(cfg, num_jobs, inject, join_timeout=120.0):
+    """Run the master in a background thread while ``inject()`` applies a
+    fault schedule from this one.
+
+    A hang is the worst possible outcome of the survivable-runtime
+    contract, so it is converted into a test failure here (bounded
+    ``join``) rather than left to the CI-level timeout.  Exceptions the
+    run raises are re-raised in the test thread.
+    """
+    holder: dict = {}
+
+    def drive():
+        try:
+            holder["out"] = run_jobs(cfg, num_jobs, K=64, M=8, N=8,
+                                     verify=True)
+        except BaseException as e:
+            holder["err"] = e
+
+    t = threading.Thread(target=drive, daemon=True, name="fault-driver")
+    t.start()
+    inject()
+    t.join(join_timeout)
+    if t.is_alive():
+        pytest.fail(f"run hung >{join_timeout:.0f}s under fault injection")
+    if "err" in holder:
+        raise holder["err"]
+    return holder["out"]
 
 
 def _runtime_worker_threads() -> list[str]:
@@ -482,6 +530,148 @@ class TestSocketFaults:
             finally:
                 transport.shutdown(timeout=8.0)
             assert not _runtime_worker_threads()
+
+
+class TestDegradeConformance:
+    """The survivable-runtime acceptance scenarios: under
+    ``fault_policy="degrade"``, SIGKILLing workers mid-run must end in a
+    decode-verified completion (``n - k`` kills) or a prompt degraded
+    release (below-``k`` kills) — never a hang, never an exception.
+    Process-backend workers are killed with a real ``SIGKILL`` (no
+    cleanup handlers run); socket cases own a private 5-host cluster."""
+
+    def _degrade_cfg(self, backend, hosts=None, **kw):
+        kw.setdefault("mu", MU5)
+        kw.setdefault("arrival_rate", 8.0)
+        kw.setdefault("complexity", 8.0)
+        kw.setdefault("fault_policy", "degrade")
+        kw.setdefault("seed", 3)
+        if backend == "socket":
+            # fast liveness knobs: detection within ~1 s, single re-dial
+            kw.setdefault("heartbeat_interval", 0.2)
+            kw.setdefault("heartbeat_timeout", 1.0)
+            kw.setdefault("reconnect_attempts", 1)
+            kw["hosts"] = hosts
+        return RuntimeConfig(backend=backend, **kw)
+
+    def test_process_sigkill_n_minus_k_completes_verified(self):
+        """The headline acceptance: kill ``n - k = 1`` of 5 process
+        workers mid-run; the run completes every job at full resolution,
+        decode-verified, with the loss in the fault log — zero
+        exceptions, zero degraded releases."""
+        cfg = self._degrade_cfg("process")
+
+        def inject():
+            procs = _await_worker_processes(len(MU5))
+            time.sleep(0.5)
+            os.kill(procs[1].pid, signal.SIGKILL)
+
+        res, _ = _run_with_faults(cfg, 20, inject)
+        assert res.fault_policy == "degrade"
+        assert res.workers_lost == 1
+        kinds = [e["kind"] for e in res.fault_log]
+        assert kinds.count("quarantine") == 1
+        assert res.success.all()
+        assert not res.degraded.any()
+        assert (res.released == cfg.num_layers - 1).all()
+        assert np.nanmax(res.verify_errors) < 1e-9
+        assert not _runtime_worker_processes()
+
+    def test_process_res0_deadline_success_survives_kill(self):
+        """Acceptance: res-0 deadline success is *unchanged* while the
+        fleet absorbs an ``n - k`` kill — the proportional geometry refit
+        must keep ``T > k`` spare so the stalled survivor's tasks still
+        purge instead of gating every round.  Deadline derived from a
+        measured deadline-free baseline of the same regime (the same
+        calibration the tier-1 deadline test uses)."""
+        probe = self._degrade_cfg("process", arrival_rate=14.0,
+                                  straggler="stall", stall_workers=(2,),
+                                  stall_seconds=2.0, seed=1)
+        base_res, _ = run_jobs(probe, num_jobs=6, K=64, M=8, N=8)
+        deadline = max(0.030,
+                       2.2 * float(base_res.layer_compute[:, 0].mean()))
+        cfg = dataclasses.replace(probe, deadline=deadline, seed=0)
+
+        def inject():
+            procs = _await_worker_processes(len(MU5))
+            time.sleep(0.6)
+            os.kill(procs[1].pid, signal.SIGKILL)
+
+        res, _ = _run_with_faults(cfg, 20, inject)
+        assert res.workers_lost == 1
+        assert res.success_rate()[0] >= 0.9      # same slack as tier-1
+        assert np.nanmax(res.verify_errors) < 1e-9
+        assert not _runtime_worker_processes()
+
+    def test_process_below_k_survivors_release_degraded_promptly(self):
+        """Acceptance: killing down to ``S < k`` survivors releases every
+        remaining job at its best-ready resolution, marked degraded, with
+        the collapse in the fault log — promptly, not after a timeout."""
+        cfg = self._degrade_cfg("process")
+        marks: dict = {}
+
+        def inject():
+            procs = _await_worker_processes(len(MU5))
+            time.sleep(0.5)
+            for wid in (1, 3):
+                os.kill(procs[wid].pid, signal.SIGKILL)
+            marks["killed_at"] = time.monotonic()
+
+        res, _ = _run_with_faults(cfg, 20, inject, join_timeout=60.0)
+        # "promptly": well under the 20-job arrival span, nowhere near
+        # any heartbeat/backoff timeout regime
+        assert time.monotonic() - marks["killed_at"] < 15.0
+        assert res.workers_lost == 2
+        kinds = [e["kind"] for e in res.fault_log]
+        assert kinds.count("quarantine") == 2
+        assert "fleet-collapse" in kinds
+        assert {e["worker"] for e in res.fault_log
+                if e["kind"] == "quarantine"} == {1, 3}
+        assert res.degraded.any()
+        assert res.terminated[res.degraded].all()
+        done = ~res.terminated
+        if done.any():          # jobs finished before the kill verify
+            assert np.nanmax(res.verify_errors[done]) < 1e-9
+        assert not _runtime_worker_processes()
+
+    def test_process_fail_fast_raises_typed_error(self):
+        """The default policy's contract is *unchanged* by this PR — a
+        SIGKILLed worker still fails the run, now with the typed
+        :class:`TransportDeadError` (satellite: typed exceptions)."""
+        cfg = self._degrade_cfg("process", fault_policy="fail-fast")
+
+        def inject():
+            procs = _await_worker_processes(len(MU5))
+            time.sleep(0.4)
+            os.kill(procs[0].pid, signal.SIGKILL)
+
+        with pytest.raises(TransportDeadError, match="died"):
+            _run_with_faults(cfg, 20, inject)
+        assert not _runtime_worker_processes()
+
+    def test_socket_kill_revive_readmits_and_completes(self):
+        """Acceptance: a SIGKILLed socket host restarted on its port is
+        readmitted through the reconnect + hello/watermark resync path —
+        quarantine then readmit in the fault log, geometry restored, and
+        the whole stream decode-verified."""
+        with LocalCluster(len(MU5)) as cluster:
+            cfg = self._degrade_cfg("socket", hosts=cluster.hosts)
+
+            def inject():
+                time.sleep(1.2)
+                cluster.kill(2)
+                time.sleep(1.8)
+                cluster.revive(2)
+
+            res, _ = _run_with_faults(cfg, 80, inject, join_timeout=180.0)
+        assert res.workers_lost == 1
+        kinds = [e["kind"] for e in res.fault_log]
+        assert kinds.count("quarantine") == 1
+        assert "readmit" in kinds
+        assert res.success.all()
+        assert not res.degraded.any()
+        assert np.nanmax(res.verify_errors) < 1e-9
+        assert not _runtime_worker_threads()
 
 
 class TestJaxBackendSmoke:
