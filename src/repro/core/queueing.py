@@ -10,6 +10,11 @@
   the computational term scales with the fraction of mini-jobs needed for
   resolution l, eq. (3)-(4):
   ``E[T_s^l] >= (sum_{i<=l} J(i) / m^2) * 1 / sum_p (1 / E[T_p])``.
+
+The waiting-time term alone (:func:`gg1_waiting_time`) is the serving
+gateway's admission bound: a request's deadline must cover backlog +
+expected wait + its resolution's computational share, or the queue
+provably cannot serve it in time (see :mod:`repro.runtime.gateway`).
 """
 
 from __future__ import annotations
@@ -22,7 +27,8 @@ import numpy as np
 from repro.core import layering
 
 __all__ = [
-    "Moments", "service_rate_bound", "gg1_delay", "layered_delay_bounds",
+    "Moments", "service_rate_bound", "gg1_waiting_time", "gg1_delay",
+    "layered_delay_bounds",
 ]
 
 
@@ -46,6 +52,21 @@ def service_rate_bound(worker_means: Sequence[float]) -> float:
     return float(sum(1.0 / m for m in worker_means))
 
 
+def gg1_waiting_time(arrival: Moments, service: Moments) -> float:
+    """Marchal's G/G/1 mean *waiting* time (the queueing term alone).
+
+    ``W ~= E[T_s] * (rho / (1 - rho)) * (c_a^2 + c_s^2) / 2`` with
+    ``rho = E[T_s] / E[T_a]``; ``inf`` when the queue is unstable
+    (``rho >= 1``).  Exact for M/D/1, an approximation elsewhere; for
+    M/M/1 it reduces to the classic ``Wq = rho / (mu - lambda)``.
+    """
+    rho = service.mean / arrival.mean
+    if rho >= 1.0:
+        return float("inf")
+    return (service.mean * (rho / (1.0 - rho))
+            * (arrival.scv + service.scv) / 2.0)
+
+
 def gg1_delay(arrival: Moments, service: Moments,
               service_mean_override: float | None = None) -> float:
     """Eq. (2): mean execution delay (compute + queueing), Marchal approx.
@@ -54,10 +75,7 @@ def gg1_delay(arrival: Moments, service: Moments,
     summand) — used to inject the theoretical lower bound E[T_s] while the
     queueing term keeps the (empirical or modeled) service moments.
     """
-    rho = service.mean / arrival.mean
-    if rho >= 1.0:
-        return float("inf")
-    queue = service.mean * (rho / (1.0 - rho)) * (arrival.scv + service.scv) / 2.0
+    queue = gg1_waiting_time(arrival, service)
     compute = (service_mean_override
                if service_mean_override is not None else service.mean)
     return compute + queue
@@ -75,8 +93,5 @@ def layered_delay_bounds(m: int, worker_means: Sequence[float],
     rate = service_rate_bound(worker_means)
     cum = np.asarray(layering.cumulative_minijobs(m), dtype=np.float64)
     ts_l = (cum / (m * m)) / rate  # eq. (3)
-    rho = service.mean / arrival.mean
-    if rho >= 1.0:
-        return np.full(cum.shape, np.inf)
-    queue = service.mean * (rho / (1.0 - rho)) * (arrival.scv + service.scv) / 2.0
+    queue = gg1_waiting_time(arrival, service)
     return ts_l + queue  # eq. (4)

@@ -25,6 +25,11 @@ Examples::
     # remote worker spans clock-aligned onto the master timebase
     PYTHONPATH=src python -m repro.launch.runctl --jobs 20 \
         --backend socket --local-cluster --trace out.json --timeline
+
+    # serving gateway: open request stream with per-request deadlines
+    # and G/G/1 admission over one shared fleet
+    PYTHONPATH=src python -m repro.launch.runctl serve-gateway \
+        --requests 60 --rate 20 --deadline 0.06 --json gateway.json
 """
 
 from __future__ import annotations
@@ -138,6 +143,11 @@ def main(argv=None) -> int:
         # program sharing the runctl entrypoint)
         from repro.launch import worker_host
         return worker_host.main(argv[1:])
+    if argv and argv[0] == "serve-gateway":
+        # the serving front-end: open request stream, per-request
+        # deadlines, G/G/1 admission — see repro.launch.serve_gateway
+        from repro.launch import serve_gateway
+        return serve_gateway.main(argv[1:])
     ap = argparse.ArgumentParser(
         prog="runctl", description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)

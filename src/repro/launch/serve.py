@@ -1,27 +1,35 @@
 """Batched serving driver with deadline-bounded progressive resolution.
 
-The paper's §IV deadline experiment, on-chip (DESIGN.md §3.1): each decode
-step has a time budget.  The LM head is a :class:`LayeredLinear`
-(digit-plane decomposed); logits are produced resolution-by-resolution,
-MSB-planes first.  When the deadline hits, the server releases the best
-resolution computed so far instead of nothing — mirroring the fusion node
-releasing the highest completed layer.
+The paper's §IV deadline experiment at the LM-head (DESIGN.md §3.1):
+each decode step has a budget, logits are produced resolution-by-
+resolution MSB-first, and when the budget expires the server releases
+the best resolution computed so far instead of nothing.
 
-On CPU the "budget" is measured in *resolution layers* rather than
-wall-time (deterministic tests); ``--deadline-ms`` switches to wall-clock.
-The wall-clock path is driven by :class:`PlaneBudgetController` — the
-runtime engine's deadline-margin policy signal
-(:func:`repro.runtime.adaptive.margin_ratio`) applied per decode step:
-instead of reactively checking whether the deadline has *already* passed,
-the server predicts whether the next plane's projected cost still fits
-the remaining margin, and stops issuing planes the step before a miss.
+Two budget modes, one release contract:
+
+* ``layer_budget`` — the budget is a *resolution count* (deterministic,
+  test-friendly): the jitted on-chip head series
+  (:func:`repro.core.progressive.resolution_series`) computes ``m``
+  plane-partial logits and the step releases layer ``budget``.
+* ``deadline_ms`` — the budget is wall-clock, and the step IS a runtime
+  job: the head matmul ``hidden @ W`` is submitted to a
+  :class:`~repro.runtime.gateway.ServingGateway` (thread-backend fleet,
+  one per batch shape) with the step's deadline and a guaranteed
+  minimum of resolution 0, so all deadline logic — §IV termination,
+  best-ready release, guaranteed-minimum rounds — flows through the
+  runtime's own machinery rather than a serving-side controller.  Both
+  operands are digit-decomposed, so the step walks the full
+  ``L = 2m - 1`` layered resolutions of Definition 1.
+
+The historical ``PlaneBudgetController`` (a serving-local EWMA deadline
+predictor) is gone: ``launch/serve.py`` no longer owns any deadline
+controller.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 from typing import Optional
 
 import jax
@@ -32,54 +40,9 @@ from repro.configs import registry
 from repro.configs.base import ModelConfig
 from repro.core import progressive
 from repro.models import transformer as T
-from repro.runtime.adaptive import margin_ratio
+from repro.runtime import RuntimeConfig, ServingGateway
 
-__all__ = ["ProgressiveServer", "PlaneBudgetController", "main"]
-
-
-class PlaneBudgetController:
-    """Per-step plane budget from the runtime's deadline-margin signal.
-
-    The serving twin of the runtime's ``deadline-margin`` ω-policy,
-    sharing its margin arithmetic (:func:`repro.runtime.adaptive.
-    margin_ratio`): the work unit is one MSB-first head plane instead of
-    one mini-job round, and the control action is "issue the next plane
-    or release now" instead of retuning ω.  An EWMA of measured per-plane
-    seconds (persistent across decode steps — plane cost is stationary)
-    projects the next plane's cost; the plane is issued only while the
-    projected cost fits the remaining margin (``ratio >= low``).  Plane 0
-    is always computed — releasing *something* is the §IV contract.
-    """
-
-    def __init__(self, deadline_ms: float, *, low: float = 1.0,
-                 alpha: float = 0.3):
-        if deadline_ms < 0.0:
-            raise ValueError(f"deadline_ms must be >= 0, got {deadline_ms}")
-        self.deadline = deadline_ms / 1e3   # seconds
-        self.low = low
-        self.alpha = alpha
-        self._plane_ewma: Optional[float] = None
-        self._t0 = 0.0
-
-    def begin_step(self) -> None:
-        """Start one decode step's clock."""
-        self._t0 = time.perf_counter()
-
-    def observe_plane(self, seconds: float) -> None:
-        """Feed one plane's measured wall cost into the EWMA."""
-        self._plane_ewma = (seconds if self._plane_ewma is None
-                            else (1.0 - self.alpha) * self._plane_ewma
-                            + self.alpha * seconds)
-
-    def should_continue(self) -> bool:
-        """Issue the next plane?  Shared margin math, one unit of work."""
-        margin = self.deadline - (time.perf_counter() - self._t0)
-        ratio = margin_ratio(margin, self._plane_ewma, 1)
-        if ratio is None:
-            # no cost estimate yet (first plane of the first step failed
-            # to record?) — fall back to the reactive check
-            return margin > 0.0
-        return ratio >= self.low
+__all__ = ["ProgressiveServer", "ServeStats", "main"]
 
 
 @dataclasses.dataclass
@@ -87,10 +50,65 @@ class ServeStats:
     steps: int = 0
     full_resolution: int = 0
     released_at_layer: Optional[list] = None
+    #: the release scale: ``m`` head planes (layer_budget / unbudgeted
+    #: mode) or ``2m - 1`` layered resolutions (deadline_ms mode)
+    resolutions: int = 0
+    #: measured head-service seconds per step (deadline_ms mode only) —
+    #: the calibration signal for deadline-sizing tests
+    head_service_seconds: Optional[list] = None
 
     def __post_init__(self):
         if self.released_at_layer is None:
             self.released_at_layer = []
+        if self.head_service_seconds is None:
+            self.head_service_seconds = []
+
+
+class _RuntimeHead:
+    """The LM head as runtime jobs: one warm thread-backend gateway per
+    batch shape, each decode step one deadline-bounded layered job.
+
+    ``hidden @ W`` is submitted as ``a.T @ b`` with ``a = hidden.T``
+    (so the coded split needs ``n1 | batch`` and ``n2 | vocab``), a
+    per-step absolute deadline, and ``min_resolution=0`` — the runtime
+    guarantees resolution 0 even past the deadline, the §IV
+    release-something contract the old plane controller hand-rolled.
+    """
+
+    def __init__(self, w: np.ndarray, m: int, d: int, batch: int):
+        vocab = w.shape[1]
+        n1 = next(n for n in (4, 2, 1) if batch % n == 0)
+        n2 = next(n for n in (8, 4, 2, 1) if vocab % n == 0)
+        cfg = RuntimeConfig(mu=(500.0, 500.0, 500.0), arrival_rate=1000.0,
+                            n1=n1, n2=n2, omega=1.0, m=m, d=d,
+                            straggler="none", backend="thread")
+        self.w = np.asarray(w, np.float64)
+        self.num_layers = cfg.num_layers
+        self.gateway = ServingGateway(cfg, admission="none").start()
+
+    def step(self, hidden: np.ndarray,
+             deadline_s: float) -> tuple[np.ndarray, int, float]:
+        """One head matmul under a deadline; returns
+        ``(logits, released_resolution, service_seconds)``."""
+        ticket = self.gateway.submit(hidden.T, self.w,
+                                     deadline=max(deadline_s, 1e-6),
+                                     min_resolution=0)
+        ticket.wait()
+        lr = ticket.result
+        rel = ticket.released_resolution
+        if rel < 0:
+            # deadline fired before even resolution 0 landed; the
+            # guaranteed-minimum rounds still finish it — block for the
+            # res-0 value, the step must release *something*
+            lr.wait_resolution(0)
+            rel = 0
+        svc = (0.0 if lr.service_started_at is None
+               or lr.released_at is None
+               else lr.released_at - lr.service_started_at)
+        return np.asarray(lr.resolution(rel)), rel, svc
+
+    def close(self) -> None:
+        self.gateway.stop()
 
 
 class ProgressiveServer:
@@ -103,7 +121,10 @@ class ProgressiveServer:
         w = (params["embed"].T if cfg.tie_embeddings
              else params["lm_head"]).astype(jnp.float32)
         self.lm_head = progressive.make_layered_linear(w, m=m, d=d)
+        self._head_w = w
         self.m = m
+        self.d = d
+        self._runtime_heads: dict[int, _RuntimeHead] = {}
 
         def hidden_step(params, token, caches, pos):
             """decode_step but returning final hidden state, not logits."""
@@ -156,18 +177,26 @@ class ProgressiveServer:
             lambda h: progressive.resolution_series(self.lm_head,
                                                     h.astype(jnp.float32)))
 
-        # Per-plane incremental head steps (progressive.plane_step), MSB
-        # first.  Separate jitted fns (not one fused series) so a deadline
-        # can stop BEFORE the next plane's matmul is issued.
-        def make_plane_fn(l: int):
-            if l == 0:
-                return jax.jit(lambda h: progressive.plane_step(
-                    self.lm_head, h.astype(jnp.float32), 0))
-            return jax.jit(lambda h, acc: progressive.plane_step(
-                self.lm_head, h.astype(jnp.float32), l, acc))
+    def _runtime_head(self, batch: int) -> _RuntimeHead:
+        head = self._runtime_heads.get(batch)
+        if head is None:
+            head = _RuntimeHead(np.asarray(self._head_w), self.m, self.d,
+                                batch)
+            self._runtime_heads[batch] = head
+        return head
 
-        self._plane_fns = [make_plane_fn(l) for l in range(self.m)]
-        self._warm_plane_shapes: set = set()
+    def close(self) -> None:
+        """Stop every runtime-head gateway fleet (idempotent)."""
+        heads, self._runtime_heads = self._runtime_heads, {}
+        for head in heads.values():
+            head.close()
+
+    def __enter__(self) -> "ProgressiveServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        del exc
+        self.close()
 
     def prefill(self, tokens, max_len: int, **extras):
         return T.prefill(self.params, tokens, self.cfg, max_len=max_len,
@@ -177,61 +206,42 @@ class ProgressiveServer:
                layer_budget: Optional[int] = None,
                deadline_ms: Optional[float] = None):
         """Greedy decode; each step releases logits at the resolution the
-        budget allows.  Returns (tokens (B, num_tokens), stats)."""
+        budget allows.  Returns (tokens (B, num_tokens), stats).
+
+        With ``deadline_ms``, ``stats.released_at_layer`` counts layered
+        resolutions (1..2m-1: the runtime decomposes BOTH operands);
+        otherwise head planes (1..m).  ``stats.resolutions`` carries the
+        scale in use.
+        """
         if layer_budget is not None and deadline_ms is not None:
             raise ValueError(
                 "layer_budget and deadline_ms are mutually exclusive "
                 "budgets; pass one or the other")
-        stats = ServeStats()
-        budget: Optional[PlaneBudgetController] = None
+        stats = ServeStats(resolutions=(2 * self.m - 1
+                                        if deadline_ms is not None
+                                        else self.m))
         tok = tokens
         out = []
         for i in range(num_tokens):
             pos = jnp.int32(start_pos + i)
             hidden, caches = self._hidden_step(self.params, tok, caches, pos)
             if deadline_ms is not None:
-                # Incremental MSB-first accumulation under the runtime's
-                # deadline-margin policy signal: after each plane, the
-                # budget controller projects the next plane's cost (EWMA,
-                # persistent across steps) against the remaining margin
-                # and stops issuing planes the step BEFORE a predicted
-                # miss — the partial sum (a valid Definition-1
-                # resolution) is released as-is.
-                warm_key = (hidden.shape, str(hidden.dtype))
-                if warm_key not in self._warm_plane_shapes:
-                    # compile every plane fn off the clock: a first call's
-                    # cost is XLA compilation, not plane compute — timed,
-                    # it would poison the persistent EWMA and suppress
-                    # higher resolutions for many subsequent steps.  Keyed
-                    # by operand shape/dtype because jit caching is.
-                    warm = None
-                    for fn in self._plane_fns:
-                        warm = fn(hidden) if warm is None else fn(hidden,
-                                                                  warm)
-                    jax.block_until_ready(warm)
-                    self._warm_plane_shapes.add(warm_key)
-                if budget is None:
-                    budget = PlaneBudgetController(deadline_ms)
-                budget.begin_step()
-                acc = None
-                release = 0
-                for l in range(self.m):
-                    tp = time.perf_counter()
-                    acc = (self._plane_fns[l](hidden) if acc is None
-                           else self._plane_fns[l](hidden, acc))
-                    jax.block_until_ready(acc)
-                    budget.observe_plane(time.perf_counter() - tp)
-                    release = l + 1
-                    if release < self.m and not budget.should_continue():
-                        break
-                logits = acc * self.lm_head.scale
+                # the step is a runtime job: deadline release, best-ready
+                # resolution, and the guaranteed res-0 minimum all come
+                # from the runtime's §IV machinery
+                head = self._runtime_head(int(hidden.shape[0]))
+                logits_np, rel, svc = head.step(
+                    np.asarray(hidden, np.float64), deadline_ms / 1e3)
+                release = rel + 1
+                stats.head_service_seconds.append(svc)
+                logits = jnp.asarray(logits_np)
             else:
                 release = (self.m if layer_budget is None
                            else max(1, min(layer_budget, self.m)))
                 series = self._head_series(hidden)     # (m, B, V)
                 logits = series[release - 1]
             stats.steps += 1
-            stats.full_resolution += int(release == self.m)
+            stats.full_resolution += int(release == stats.resolutions)
             stats.released_at_layer.append(release)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             out.append(tok)
@@ -247,8 +257,8 @@ def main(argv=None) -> int:
     ap.add_argument("--layer-budget", type=int, default=None,
                     help="resolutions computable per step (None = all)")
     ap.add_argument("--deadline-ms", type=float, default=None,
-                    help="wall-clock budget per decode step; planes are "
-                         "accumulated MSB-first until it expires")
+                    help="wall-clock budget per decode step; the head "
+                         "runs as a deadline-bounded runtime job")
     ap.add_argument("--planes", type=int, default=2)
     args = ap.parse_args(argv)
 
@@ -271,12 +281,17 @@ def main(argv=None) -> int:
     if cfg.num_image_tokens:
         extras["extra_embeds"] = jnp.zeros(
             (args.batch, cfg.num_image_tokens, cfg.d_model), cfg.cdtype())
-    _, caches = server.prefill(tokens, max_len, **extras)
-    out, stats = server.decode(tokens[:, -1:], caches, args.prompt_len,
-                               args.gen, layer_budget=args.layer_budget,
-                               deadline_ms=args.deadline_ms)
+    try:
+        _, caches = server.prefill(tokens, max_len, **extras)
+        out, stats = server.decode(tokens[:, -1:], caches, args.prompt_len,
+                                   args.gen,
+                                   layer_budget=args.layer_budget,
+                                   deadline_ms=args.deadline_ms)
+    finally:
+        server.close()
     print(f"[serve] generated {out.shape} tokens; "
-          f"{stats.full_resolution}/{stats.steps} steps at full resolution; "
+          f"{stats.full_resolution}/{stats.steps} steps at full resolution "
+          f"(of {stats.resolutions}); "
           f"release layers: {stats.released_at_layer}")
     return 0
 

@@ -24,7 +24,9 @@ from repro.runtime.adaptive import (POLICIES, AIMDPolicy,
 from repro.runtime.errors import FusionStateError, TransportDeadError
 from repro.runtime.faults import FaultSupervisor
 from repro.runtime.fusion import FusionNode, LayeredResult, RoundFusion
-from repro.runtime.master import Master, make_jobs, run_jobs
+from repro.runtime.gateway import (AdmissionController, GatewayStats,
+                                   ServingGateway, Ticket)
+from repro.runtime.master import JobQueue, Master, make_jobs, run_jobs
 from repro.runtime.metrics import (STAGES, RuntimeResult, delay_table,
                                    format_controller_trace,
                                    format_delay_table, format_stage_table)
@@ -53,7 +55,8 @@ __all__ = [
     "Worker", "WorkerPool", "StragglerModel", "BatchRunner", "make_compute",
     "WorkerTransport", "BACKENDS", "make_transport",
     "FusionNode", "RoundFusion", "LayeredResult",
-    "Master", "make_jobs", "run_jobs",
+    "Master", "JobQueue", "make_jobs", "run_jobs",
+    "ServingGateway", "AdmissionController", "GatewayStats", "Ticket",
     "OmegaController", "OmegaPolicy", "RoundObservation", "POLICIES",
     "FixedPolicy", "AIMDPolicy", "DeadlineMarginPolicy", "margin_ratio",
     "RuntimeResult", "delay_table", "format_delay_table",

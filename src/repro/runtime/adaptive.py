@@ -74,11 +74,11 @@ def margin_ratio(margin: Optional[float], unit_ewma: Optional[float],
     predicted miss.  Returns None when undefined (no deadline, no work
     left, or no cost estimate yet); callers treat None as "no signal".
 
-    Both :class:`DeadlineMarginPolicy` (retuning ω between rounds) and the
-    serving plane-budget adapter
-    (:class:`repro.launch.serve.PlaneBudgetController`) lean on this one
-    function, so the runtime and the serving path act on the same margin
-    arithmetic.
+    :class:`DeadlineMarginPolicy` (retuning ω between rounds) leans on
+    this function.  (The serving path's historical plane-budget adapter
+    did too; since ``launch/serve.py`` routes deadlines through the
+    runtime itself, the runtime's §IV machinery is the only deadline
+    controller left.)
     """
     if (margin is None or units_left <= 0 or unit_ewma is None
             or unit_ewma <= 0.0):

@@ -26,6 +26,7 @@ MSB-first, so resolution 0 is ready after a single round.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Optional
 
 import numpy as np
@@ -155,10 +156,23 @@ class LayeredResult:
         self._values: list[Optional[np.ndarray]] = [None] * num_layers
         self._ready_at: list[Optional[float]] = [None] * num_layers
         self._released = threading.Event()
+        self._cb_lock = threading.Lock()
+        self._callbacks: list = []
         self.released_resolution: int = -1
         self.terminated = False
+        #: Monotonic instant service started (master sets it; None while
+        #: the job is still queued).  With the job's ``arrival`` this is
+        #: the measured queue wait — the number the gateway's admission
+        #: bound is checked against.
+        self.service_started_at: Optional[float] = None
+        #: Monotonic release instant (set by :meth:`release`).
+        self.released_at: Optional[float] = None
 
     # -- producer side (master) ---------------------------------------------
+    def mark_started(self, t: float) -> None:
+        """Record the service-start instant (master thread only)."""
+        self.service_started_at = t
+
     def mark_resolution(self, l: int, value: np.ndarray, t: float) -> None:
         """Publish resolution ``l`` (master thread only).
 
@@ -173,7 +187,27 @@ class LayeredResult:
         """End the job (§IV finish or termination); master thread only."""
         self.terminated = terminated
         self.released_resolution = self.best_resolution()
+        self.released_at = time.monotonic()
         self._released.set()
+        with self._cb_lock:
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
+
+    def on_release(self, fn) -> None:
+        """Register ``fn(self)`` to run at release (any thread).
+
+        Runs immediately if the job already released — registration can
+        never miss the edge.  Callbacks fire on the *releasing* thread
+        (the master loop), so they must be cheap and non-blocking: the
+        gateway's drain thread uses one to wake its condition variable,
+        nothing more.
+        """
+        with self._cb_lock:
+            if not self._released.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
 
     # -- consumer side -------------------------------------------------------
     def resolution_ready(self, l: int) -> bool:

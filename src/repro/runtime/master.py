@@ -21,6 +21,19 @@ multiprocessing workers, or JAX-device workers, selected by
    requires BOTH deadline excess AND a queued successor — releasing the
    highest completed resolution.
 
+Jobs reach the loop through one of two *sources* sharing the identical
+service path: :meth:`Master.run` replays a fixed arrival trace (the
+historical mode — the full job list is known up front and arrivals are
+slept out on the master clock), while :meth:`Master.serve_queue` drains
+an open :class:`JobQueue` that other threads feed *while the loop runs* —
+continuous admission over one warm fleet, the serving-gateway substrate
+(:mod:`repro.runtime.gateway`).  Queued jobs carry their own absolute
+deadline (:attr:`~repro.runtime.tasks.JobSpec.deadline_at`, an
+unconditional release instant), an optional guaranteed minimum
+resolution the deadline may not cut, and an optional resolution cap
+that bounds the round budget (an admission down-resolve never computes
+LSB rounds it won't release).
+
 The per-round loop is *software-pipelined* so the master's own work hides
 behind the in-flight round's worker compute instead of serializing with
 it: round ``r``'s codeword is double-buffered and dispatched, then —
@@ -51,6 +64,8 @@ against), so a measured run is decode-verified end-to-end.
 
 from __future__ import annotations
 
+import collections
+import threading
 import time
 from typing import Optional, Sequence
 
@@ -66,7 +81,7 @@ from repro.runtime.tasks import JobSpec, RoundContext, RuntimeConfig
 from repro.runtime.transport import make_transport
 from repro.runtime.worker import clock
 
-__all__ = ["Master", "make_jobs", "run_jobs"]
+__all__ = ["JobQueue", "Master", "make_jobs", "run_jobs"]
 
 
 def make_jobs(cfg: RuntimeConfig, num_jobs: int, *, K: int = 64, M: int = 8,
@@ -92,22 +107,148 @@ def make_jobs(cfg: RuntimeConfig, num_jobs: int, *, K: int = 64, M: int = 8,
             for j in range(num_jobs)]
 
 
+class JobQueue:
+    """Thread-safe open job queue feeding :meth:`Master.serve_queue`.
+
+    Producers (any thread — the serving gateway's submit path) ``put``
+    :class:`~repro.runtime.tasks.JobSpec` items; the master consumes
+    them FIFO.  :meth:`close` ends admission: the master drains whatever
+    is still queued and returns.  A ``put`` after ``close`` raises — the
+    caller must surface it as a rejected request, never a silent drop.
+    """
+
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._items: collections.deque = collections.deque()
+        self._closed = False
+
+    def put(self, job: JobSpec) -> None:
+        """Enqueue one job; raises ``RuntimeError`` once closed."""
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("JobQueue is closed")
+            self._items.append(job)
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        """End admission (idempotent); wakes a blocked consumer."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        with self._cv:
+            return self._closed
+
+    def __len__(self) -> int:
+        with self._cv:
+            return len(self._items)
+
+    # -- consumer side (the master's _QueueSource) ---------------------------
+    def _next(self) -> Optional[JobSpec]:
+        """Pop the next job, blocking until one arrives; ``None`` once
+        closed and drained."""
+        with self._cv:
+            while not self._items and not self._closed:
+                self._cv.wait()
+            return self._items.popleft() if self._items else None
+
+    def _peek(self) -> Optional[JobSpec]:
+        """The next queued job without consuming it (``None`` if empty)."""
+        with self._cv:
+            return self._items[0] if self._items else None
+
+
+class _TraceSource:
+    """Replays a fixed arrival trace — the legacy :meth:`Master.run`
+    semantics: sleep out each arrival, and expose the next trace arrival
+    as the §IV queued-successor signal."""
+
+    def __init__(self, jobs: Sequence[JobSpec]):
+        self.jobs = list(jobs)
+        self._i = 0
+        self._t0 = 0.0
+
+    def bind(self, t0: float) -> None:
+        self._t0 = t0
+
+    def next(self) -> Optional[JobSpec]:
+        if self._i >= len(self.jobs):
+            return None
+        job = self.jobs[self._i]
+        self._i += 1
+        return job
+
+    def wait_arrival(self, job: JobSpec) -> None:
+        wait = (self._t0 + job.arrival) - clock()
+        if wait > 0:           # idle until the job actually arrives
+            time.sleep(wait)
+
+    def peek_ready(self) -> Optional[JobSpec]:
+        """The next job, only once its arrival instant has passed —
+        the encode-ahead prep must not front-run the arrival process."""
+        i = self._i
+        if (i < len(self.jobs)
+                and clock() >= self._t0 + self.jobs[i].arrival):
+            return self.jobs[i]
+        return None
+
+    def successor_hint(self) -> Optional[float]:
+        """Absolute arrival instant of the queued successor (§IV)."""
+        i = self._i
+        if i < len(self.jobs):
+            return self._t0 + self.jobs[i].arrival
+        return None
+
+
+class _QueueSource:
+    """Drains an open :class:`JobQueue` — continuous admission.
+
+    A queued job has, by construction, already arrived (the producer
+    stamped ``JobSpec.arrival`` at submit time), so ``wait_arrival`` is a
+    no-op; and with no trace there is no next-arrival signal, so
+    ``cfg.deadline`` alone never terminates a queued job — per-job
+    deadlines travel on ``JobSpec.deadline_at`` instead."""
+
+    def __init__(self, queue: JobQueue):
+        self.queue = queue
+
+    def bind(self, t0: float) -> None:
+        del t0
+
+    def next(self) -> Optional[JobSpec]:
+        return self.queue._next()
+
+    def wait_arrival(self, job: JobSpec) -> None:
+        del job
+
+    def peek_ready(self) -> Optional[JobSpec]:
+        return self.queue._peek()
+
+    def successor_hint(self) -> Optional[float]:
+        return None
+
+
 class Master:
     """Event loop owning the worker transport, fusion node, and
     ω-controller.
 
-    Single-threaded driver: :meth:`run` is meant to be called once, from
-    one thread — it starts the configured worker transport
-    (``cfg.backend``: thread / process / jax, via
+    Single-threaded driver: :meth:`run` (fixed trace) or
+    :meth:`serve_queue` (open queue) is meant to be called once, from one
+    thread — it starts the configured worker transport (``cfg.backend``:
+    thread / process / jax / socket, via
     :func:`repro.runtime.transport.make_transport`), blocks until every
     job is served, and shuts the transport down (purge-mode: every
-    submitted round is already fused or terminated by then).  The only
+    submitted round is already fused or terminated by then).  The
     cross-thread surfaces are the
     :class:`~repro.runtime.fusion.LayeredResult` futures it returns
-    (consumable concurrently while the run progresses) and the fusion
-    node's result sink, which remote transports pump from a drain
-    thread.  All reported times are seconds (``time.monotonic`` deltas
-    from the run start).
+    (consumable concurrently while the run progresses), the fusion
+    node's result sink (remote transports pump it from a drain thread),
+    and — in queue mode — the :class:`JobQueue` itself plus the
+    :attr:`started` event / :attr:`t0` origin that producers use to put
+    their timestamps on the master's clock.  All reported times are
+    seconds (``time.monotonic`` deltas from the run start).
 
     The code geometry is owned by an
     :class:`~repro.runtime.adaptive.OmegaController` (``cfg.adapt`` picks
@@ -126,6 +267,13 @@ class Master:
         self.tracer = telemetry.Tracer() if cfg.trace else None
         self.fusion = FusionNode(tracer=self.tracer)
         self.controller = OmegaController(cfg)
+        #: Monotonic origin of the serve loop — valid once :attr:`started`
+        #: is set.  Queue-mode producers stamp ``JobSpec.arrival`` /
+        #: ``deadline_at`` as offsets from this instant.
+        self.t0: Optional[float] = None
+        #: Set just before the first job is consumed (fleet started,
+        #: warmup done, :attr:`t0` valid).
+        self.started = threading.Event()
 
     # -- operand preparation -------------------------------------------------
     def _prepare(self, job: JobSpec):
@@ -155,19 +303,53 @@ class Master:
         code.decode(list(range(code.k)),
                     np.stack([X[t].T @ Y[t] for t in range(code.k)]))
 
+    def _warmup_job(self) -> JobSpec:
+        """A tiny synthetic job for off-the-clock warmup — queue mode,
+        where no real job is known before the fleet starts."""
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed ^ 0x5EED)
+        lim = min(1 << (cfg.m * cfg.d - 2), 1 << 16)
+        return JobSpec(
+            job_id=-1,
+            a=rng.integers(-lim, lim, size=(16, 2 * cfg.n1), dtype=np.int64),
+            b=rng.integers(-lim, lim, size=(16, 2 * cfg.n2), dtype=np.int64))
+
     # -- the event loop --------------------------------------------------------
     def run(self, jobs: Sequence[JobSpec]
             ) -> tuple[metrics.RuntimeResult, list[LayeredResult]]:
         """Serve ``jobs`` FIFO; returns (measured result, per-job futures)."""
+        if len(jobs) == 0:
+            raise ValueError("need at least one job")
+        return self._serve(_TraceSource(jobs), warmup_job=jobs[0])
+
+    def serve_queue(self, queue: JobQueue
+                    ) -> tuple[metrics.RuntimeResult, list[LayeredResult]]:
+        """Serve an *open* :class:`JobQueue` until closed and drained.
+
+        Continuous-admission mode (the serving gateway's substrate):
+        producers ``put`` jobs from other threads while the master loop
+        is mid-job, and a queued successor lands in the encode-ahead
+        pipeline between rounds — one warm fleet, no restart.  Per-job
+        deadlines travel on ``JobSpec.deadline_at`` (absolute seconds
+        from :attr:`t0`); with no successor trace there is no §IV
+        next-arrival signal, so ``cfg.deadline`` alone never terminates
+        a queued job.
+
+        Blocks until :meth:`JobQueue.close` and every queued job is
+        served; returns the same artifacts as :meth:`run` (empty but
+        well-formed arrays when zero jobs were queued).
+        """
+        return self._serve(_QueueSource(queue),
+                           warmup_job=self._warmup_job())
+
+    def _serve(self, source, warmup_job: JobSpec
+               ) -> tuple[metrics.RuntimeResult, list[LayeredResult]]:
         cfg = self.cfg
         ctrl = self.controller
         kappa0 = ctrl.kappa.copy()      # geometry at run start (eq. 1)
         L = cfg.num_layers
         order = layering.all_minijobs_msb_first(cfg.m)
         cum = layering.cumulative_minijobs(cfg.m)
-        J = len(jobs)
-        if J == 0:
-            raise ValueError("need at least one job")
 
         tr = self.tracer
         pool = make_transport(cfg, sink=self.fusion.post,
@@ -179,17 +361,19 @@ class Master:
         # "degrade" it quarantines, re-dispatches, and decides when a job
         # must be released degraded — see repro.runtime.faults
         sup = FaultSupervisor(cfg, pool, ctrl, tracer=tr)
-        self._warmup(jobs[0])
+        self._warmup(warmup_job)
 
-        arrivals = np.asarray([jb.arrival for jb in jobs])
-        starts = np.zeros(J)
-        ends = np.zeros(J)
-        layer_compute = np.full((J, L), np.inf)
-        success = np.zeros((J, L), dtype=bool)
-        terminated = np.zeros(J, dtype=bool)
-        degraded = np.zeros(J, dtype=bool)
-        released = np.full(J, -1, dtype=np.int64)
-        verify_errors = np.full((J, L), np.nan) if self.verify else None
+        # per-job rows, appended in service order and stacked at the end:
+        # queue mode has no up-front job count (zero jobs is well-formed)
+        arrivals_l: list[float] = []
+        starts_l: list[float] = []
+        ends_l: list[float] = []
+        lc_rows: list[np.ndarray] = []
+        ok_rows: list[np.ndarray] = []
+        term_l: list[bool] = []
+        degr_l: list[bool] = []
+        rel_l: list[int] = []
+        ver_rows: Optional[list[np.ndarray]] = [] if self.verify else None
         futures: list[LayeredResult] = []
         stage = {name: 0.0 for name in metrics.STAGES}
         rounds_timed = 0
@@ -197,12 +381,15 @@ class Master:
         prev_stale = 0
         n_retunes = 0                     # controller retunes already traced
         R = len(order)
-        prepared: dict[int, tuple] = {}   # job idx -> pre-decomposed planes
+        prepared: dict[int, tuple] = {}   # job_id -> pre-decomposed planes
 
         t0 = clock()
         sup.set_origin(t0)
+        source.bind(t0)
+        self.t0 = t0
+        self.started.set()
         try:
-            for j, job in enumerate(jobs):
+            while (job := source.next()) is not None:
                 if sup.collapsed and sup.check():
                     # fleet below k and not coming back right now: no
                     # round can reach k results, so every remaining job
@@ -210,22 +397,27 @@ class Master:
                     # dispatch — at its best-ready resolution (nothing,
                     # for a job that never started), marked degraded
                     now = clock()
-                    lr = LayeredResult(job.job_id, L)
+                    lr = (job.result if job.result is not None
+                          else LayeredResult(job.job_id, L))
                     futures.append(lr)
                     lr.release(terminated=True)
-                    starts[j] = ends[j] = now - t0
-                    terminated[j] = True
-                    degraded[j] = True
-                    released[j] = lr.released_resolution
+                    arrivals_l.append(job.arrival)
+                    starts_l.append(now - t0)
+                    ends_l.append(now - t0)
+                    lc_rows.append(np.full(L, np.inf))
+                    ok_rows.append(np.zeros(L, dtype=bool))
+                    term_l.append(True)
+                    degr_l.append(True)
+                    rel_l.append(lr.released_resolution)
+                    if ver_rows is not None:
+                        ver_rows.append(np.full(L, np.nan))
                     if tr is not None:
                         tr.emit(telemetry.JOB, now, 0.0, job=job.job_id,
                                 label="degraded")
                     continue
-                wait = (t0 + job.arrival) - clock()
-                if wait > 0:           # idle until the job actually arrives
-                    time.sleep(wait)
+                source.wait_arrival(job)
                 start = clock()
-                prep = prepared.pop(j, None)
+                prep = prepared.pop(job.job_id, None)
                 if prep is None:
                     ts = clock()
                     prep = self._prepare(job)
@@ -235,15 +427,39 @@ class Master:
                         tr.emit(telemetry.PREP, ts, tp - ts,
                                 job=job.job_id)
                 qa, qb, scale, ca, cb = prep
-                lr = LayeredResult(job.job_id, L)
+                lr = (job.result if job.result is not None
+                      else LayeredResult(job.job_id, L))
                 futures.append(lr)
+                lr.mark_started(start)
 
-                next_arrival = (t0 + jobs[j + 1].arrival
-                                if j + 1 < J else None)
-                t_term = None
-                if cfg.deadline is not None and next_arrival is not None:
-                    # §IV: BOTH deadline excess AND a queued successor.
-                    t_term = max(start + cfg.deadline, next_arrival)
+                if job.deadline_at is not None:
+                    # serving mode: a per-job absolute deadline is an
+                    # unconditional release instant — an open stream has
+                    # a queued successor in the limit, so §IV's second
+                    # condition is taken as always met (and it takes
+                    # precedence over cfg.deadline)
+                    t_term = t0 + job.deadline_at
+                else:
+                    t_term = None
+                    nh = source.successor_hint()
+                    if cfg.deadline is not None and nh is not None:
+                        # §IV: BOTH deadline excess AND a queued successor.
+                        t_term = max(start + cfg.deadline, nh)
+                # resolution window: max_resolution caps the round budget
+                # (an admission down-resolve never computes LSB rounds it
+                # will not release — a capped job that finishes them all
+                # is complete, not terminated); min_resolution marks the
+                # rounds the deadline may NOT cut, so the fusion wait is
+                # unbounded inside them
+                if job.max_resolution is not None:
+                    R_job = cum[min(job.max_resolution, L - 1)]
+                else:
+                    R_job = R
+                if job.min_resolution >= 0:
+                    guaranteed = min(cum[min(job.min_resolution, L - 1)],
+                                     R_job)
+                else:
+                    guaranteed = 0
 
                 acc = np.zeros((qa.shape[1], qb.shape[1]), dtype=np.float64)
                 # per-side coded planes, filled on first use: the m**2
@@ -313,8 +529,9 @@ class Master:
                 pending = None        # fused-but-undecoded previous round
                 term = False
                 faulted = False       # released by the fault supervisor
-                for ridx, (l, pi, pj) in enumerate(order):
-                    if t_term is not None and clock() >= t_term:
+                for ridx, (l, pi, pj) in enumerate(order[:R_job]):
+                    if (t_term is not None and ridx >= guaranteed
+                            and clock() >= t_term):
                         term = True   # don't dispatch a dead round
                         break
                     # per-round liveness gate: when rounds fuse fast the
@@ -347,30 +564,35 @@ class Master:
                         pending = None
                     # 2. encode round r+1 + presample its delays into the
                     #    spare buffer, or (last round) digit-decompose the
-                    #    next *queued* job
-                    if ridx + 1 < R:
+                    #    next *queued* job — continuous admission lands
+                    #    here: a job put() mid-service preps between
+                    #    rounds with no fleet restart
+                    if ridx + 1 < R_job:
                         _, npi, npj = order[ridx + 1]
                         nxt = encode_round(npi, npj, ridx + 1)
                         nxt_delays = pool.sample_round_delays(nxt[3])
-                    elif (j + 1 < J and j + 1 not in prepared
-                          and clock() >= t0 + jobs[j + 1].arrival):
-                        ts = clock()
-                        prepared[j + 1] = self._prepare(jobs[j + 1])
-                        tp = clock()
-                        stage["prep"] += tp - ts
-                        if tr is not None:
-                            tr.emit(telemetry.PREP, ts, tp - ts,
-                                    job=jobs[j + 1].job_id)
+                    else:
+                        nj = source.peek_ready()
+                        if nj is not None and nj.job_id not in prepared:
+                            ts = clock()
+                            prepared[nj.job_id] = self._prepare(nj)
+                            tp = clock()
+                            stage["prep"] += tp - ts
+                            if tr is not None:
+                                tr.emit(telemetry.PREP, ts, tp - ts,
+                                        job=nj.job_id)
                     # ---------------------------------------------------
                     ts = clock()
-                    if t_term is None:
-                        # unbounded wait: slice it so a worker that died
-                        # (OOM-kill, crashed child, dead remote host) is
-                        # handled promptly — fail-fast raises out of
-                        # sup.check(); degrade quarantines/re-dispatches,
-                        # returning True only when the round is beyond
-                        # saving — instead of blocking the run forever on
-                        # a round that can no longer reach k results
+                    if t_term is None or ridx < guaranteed:
+                        # unbounded wait (no deadline, or a guaranteed
+                        # minimum-resolution round the deadline may not
+                        # cut): slice it so a worker that died (OOM-kill,
+                        # crashed child, dead remote host) is handled
+                        # promptly — fail-fast raises out of sup.check();
+                        # degrade quarantines/re-dispatches, returning
+                        # True only when the round is beyond saving —
+                        # instead of blocking the run forever on a round
+                        # that can no longer reach k results
                         while not (fused := rf.wait(sup.wait_slice)):
                             if sup.check():
                                 faulted = True
@@ -414,7 +636,7 @@ class Master:
                         stale=stale_now - prev_stale,
                         deadline_margin=(None if t_term is None
                                          else t_term - tw),
-                        rounds_left=R - ridx - 1,
+                        rounds_left=R_job - ridx - 1,
                         utilization=pool.busy_seconds
                         / max(tw - t0, 1e-9)))
                     prev_stale = stale_now
@@ -440,24 +662,31 @@ class Master:
                             label=("degraded" if faulted else
                                    "terminated" if term else "completed"))
 
-                starts[j] = start - t0
-                ends[j] = end - t0
-                terminated[j] = term
-                degraded[j] = faulted
-                released[j] = lr.released_resolution
+                arrivals_l.append(job.arrival)
+                starts_l.append(start - t0)
+                ends_l.append(end - t0)
+                term_l.append(term)
+                degr_l.append(faulted)
+                rel_l.append(lr.released_resolution)
+                lc = np.full(L, np.inf)
+                ok = np.zeros(L, dtype=bool)
                 for l in range(L):
                     if lr.resolution_ready(l):
-                        success[j, l] = True
-                        layer_compute[j, l] = lr.ready_at(l) - start
+                        ok[l] = True
+                        lc[l] = lr.ready_at(l) - start
+                lc_rows.append(lc)
+                ok_rows.append(ok)
                 if self.verify:
                     ref = layering.layered_matmul_reference(
                         qa, qb, m=cfg.m, d=cfg.d).astype(np.float64) * scale
+                    ver = np.full(L, np.nan)
                     for l in range(L):
                         if lr.resolution_ready(l):
                             denom = max(float(np.abs(ref[l]).max()), 1.0)
-                            verify_errors[j, l] = float(
+                            ver[l] = float(
                                 np.abs(lr.resolution(l) - ref[l]).max()
                                 / denom)
+                    ver_rows.append(ver)
         finally:
             pool.shutdown()
 
@@ -465,19 +694,30 @@ class Master:
         # counters (socket backend); in-process ones have nothing to say
         transport_stats = getattr(pool, "wire_stats", None)
 
+        J = len(starts_l)
         result = metrics.RuntimeResult(
-            arrivals=arrivals, starts=starts, ends=ends,
-            layer_compute=layer_compute, success=success,
-            terminated=terminated, kappa=kappa0,
+            arrivals=np.asarray(arrivals_l, dtype=np.float64),
+            starts=np.asarray(starts_l, dtype=np.float64),
+            ends=np.asarray(ends_l, dtype=np.float64),
+            layer_compute=(np.vstack(lc_rows) if J
+                           else np.zeros((0, L))),
+            success=(np.vstack(ok_rows) if J
+                     else np.zeros((0, L), dtype=bool)),
+            terminated=np.asarray(term_l, dtype=bool), kappa=kappa0,
             worker_busy=pool.busy_seconds, wall_elapsed=clock() - t0,
-            stale_results=self.fusion.stale_results, released=released,
-            verify_errors=verify_errors, stage_seconds=stage,
+            stale_results=self.fusion.stale_results,
+            released=np.asarray(rel_l, dtype=np.int64),
+            verify_errors=(None if ver_rows is None
+                           else np.vstack(ver_rows) if J
+                           else np.zeros((0, L))),
+            stage_seconds=stage,
             stage_rounds=rounds_timed, controller=ctrl.summary(),
             omega_trace=list(ctrl.trace), backend=pool.name,
             transport_stats=transport_stats,
             tasks_done=pool.tasks_done, tasks_purged=pool.tasks_purged,
             fault_policy=cfg.fault_policy, fault_log=sup.fault_log,
-            workers_lost=sup.workers_lost, degraded=degraded,
+            workers_lost=sup.workers_lost, degraded=np.asarray(
+                degr_l, dtype=bool),
             trace_events=(tr.events() if tr is not None else None),
             trace_dropped=(tr.dropped if tr is not None else 0),
             trace_t0=t0,

@@ -268,12 +268,62 @@ class JobSpec:
     ``a (K, M)`` and ``b (K, N)``; float inputs are quantized to ``m*d``
     bits at service start (ints pass through).  ``arrival`` is the offset in
     seconds from the run start at which the job enters the queue.
+
+    The serving fields give each job its *own* deadline contract (the
+    multi-tenant gateway's per-request semantics) instead of the global
+    ``RuntimeConfig.deadline``:
+
+    ``deadline_at``
+        Absolute release instant, seconds from the run start (same clock
+        as ``arrival``).  Unlike the §IV trace rule — which terminates
+        only with BOTH deadline excess AND a queued successor — a per-job
+        deadline is unconditional: an open request stream is the queued
+        successor in the limit, so the job releases its best-ready
+        resolution at this instant no matter what is behind it.  Takes
+        precedence over ``RuntimeConfig.deadline``.
+    ``min_resolution``
+        Resolutions up to this index are computed even past
+        ``deadline_at`` (the "always release *something*" serving
+        guarantee; -1 disables it, so a job that starts after its
+        deadline releases immediately with nothing).
+    ``max_resolution``
+        Caps the job at ``cumulative_minijobs(m)[max_resolution]``
+        rounds — how a down-resolved admission actually sheds fleet
+        work.  A capped job that runs all its rounds is *complete* (not
+        terminated): it delivered its admitted resolution.
+    ``result``
+        Optional pre-built :class:`~repro.runtime.fusion.LayeredResult`
+        the master publishes into; lets a submitter hold the future
+        *before* the job reaches service (the gateway's drain thread
+        waits on it).  The master builds its own when None.
     """
 
     job_id: int
     a: np.ndarray
     b: np.ndarray
     arrival: float = 0.0
+    deadline_at: Optional[float] = None
+    min_resolution: int = -1
+    max_resolution: Optional[int] = None
+    result: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.deadline_at is not None and self.deadline_at < 0.0:
+            raise ValueError(
+                f"deadline_at is seconds from run start, must be >= 0; "
+                f"got {self.deadline_at}")
+        if self.min_resolution < -1:
+            raise ValueError(f"min_resolution must be >= -1 (-1 = no "
+                             f"guarantee), got {self.min_resolution}")
+        if self.max_resolution is not None:
+            if self.max_resolution < 0:
+                raise ValueError(f"max_resolution must be >= 0, got "
+                                 f"{self.max_resolution}")
+            if self.min_resolution > self.max_resolution:
+                raise ValueError(
+                    f"min_resolution {self.min_resolution} exceeds "
+                    f"max_resolution {self.max_resolution}")
 
 
 class RoundContext:

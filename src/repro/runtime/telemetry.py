@@ -48,8 +48,8 @@ __all__ = [
     "TraceEvent", "Tracer", "EVENT_KINDS", "SPAN_KINDS", "INSTANT_KINDS",
     "PREP", "ENCODE", "DISPATCH", "ROUND", "DECODE", "RESOLUTION", "JOB",
     "RETUNE", "TASK", "RESULT", "FUSED", "STALE", "HEARTBEAT", "RECONNECT",
-    "DEAD", "QUARANTINE", "READMIT", "REDISPATCH", "serve_metrics",
-    "worker_metrics_text",
+    "DEAD", "QUARANTINE", "READMIT", "REDISPATCH", "REQUEST", "ADMIT",
+    "RELEASE", "serve_metrics", "worker_metrics_text",
 ]
 
 clock = time.monotonic
@@ -83,11 +83,19 @@ READMIT = "readmit"        # instant: quarantined worker rejoined (socket
 #                            reconnect + hello/watermark resync)
 REDISPATCH = "redispatch"  # instant: a lost slice re-sent to a survivor;
 #                            value = task count, worker = new owner
+# Serving gateway (repro.runtime.gateway, one lifecycle per request):
+REQUEST = "request"        # span: submit -> client release; label =
+#                            admitted|down-resolved|rejected[/degraded],
+#                            value = released resolution (-1 = nothing)
+ADMIT = "admit"            # instant: admission verdict; value = admitted
+#                            resolution (-1 = rejected), label = decision
+RELEASE = "release"        # instant: client release (deadline fire or
+#                            early completion); value = resolution
 
-SPAN_KINDS = frozenset({PREP, ENCODE, ROUND, DECODE, JOB, TASK})
+SPAN_KINDS = frozenset({PREP, ENCODE, ROUND, DECODE, JOB, TASK, REQUEST})
 INSTANT_KINDS = frozenset({DISPATCH, RESOLUTION, RETUNE, RESULT, FUSED,
                            STALE, HEARTBEAT, RECONNECT, DEAD, QUARANTINE,
-                           READMIT, REDISPATCH})
+                           READMIT, REDISPATCH, ADMIT, RELEASE})
 EVENT_KINDS = SPAN_KINDS | INSTANT_KINDS
 
 

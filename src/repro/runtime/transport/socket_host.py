@@ -468,6 +468,12 @@ class _WorkerLink:
                 sock = socket.create_connection(
                     (self.host, self.port),
                     timeout=max(0.1, deadline - clock()))
+                # create_connection's timeout sticks to the socket: left
+                # in place it turns every idle stretch on the receiver
+                # into a spurious "recv: timed out" re-dial that kills
+                # the in-flight rounds of the connection it replaces.
+                # The dial bound must not outlive the dial.
+                sock.settimeout(None)
                 sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
                 return _SockConn(sock, self.transport._cfg.compress)
             except OSError as e:

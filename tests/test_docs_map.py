@@ -50,7 +50,8 @@ def test_docs_exist_and_carry_anchors():
     files = doc_files()
     names = {p.name for p in files}
     assert {"paper-map.md", "architecture.md", "adaptive-omega.md",
-            "observability.md", "fault-tolerance.md"} <= names, names
+            "observability.md", "fault-tolerance.md",
+            "serving-gateway.md"} <= names, names
     assert anchors_in(DOCS / "paper-map.md"), \
         "paper-map.md lost its code anchors"
 
@@ -82,5 +83,8 @@ def test_paper_map_covers_the_load_bearing_surface():
             "repro.runtime.telemetry.Tracer",
             "repro.runtime.trace_export.chrome_trace",
             "repro.runtime.faults.FaultSupervisor",
+            "repro.runtime.gateway.ServingGateway",
+            "repro.runtime.gateway.AdmissionController",
+            "repro.runtime.master.Master.serve_queue",
     ):
         assert required in text, f"paper-map.md no longer maps {required}"

@@ -8,50 +8,9 @@ import pytest
 
 from repro.configs.base import AttentionConfig, ModelConfig
 from repro.core import progressive
-from repro.launch.serve import PlaneBudgetController, ProgressiveServer
+from repro.launch.serve import ProgressiveServer
 from repro.models import transformer as T
 from repro.optim import layered_grads
-from repro.runtime.adaptive import margin_ratio
-
-
-class TestPlaneBudgetController:
-    """The serving plane budget rides the runtime's margin-ratio signal."""
-
-    def test_shares_the_runtime_margin_math(self):
-        """The go/no-go decision is exactly adaptive.margin_ratio >= low:
-        one projected plane (the EWMA) against the remaining margin."""
-        ctl = PlaneBudgetController(deadline_ms=100.0, low=1.0)
-        ctl.begin_step()
-        ctl.observe_plane(0.030)            # ewma = 30 ms/plane
-        margin = ctl.deadline - 0.0         # elapsed ~0 in this test
-        assert margin_ratio(margin, 0.030, 1) > 1.0
-        assert ctl.should_continue()        # 100 ms left, 30 ms projected
-        # shrink the margin below one projected plane: must stop
-        ctl2 = PlaneBudgetController(deadline_ms=10.0, low=1.0)
-        ctl2.begin_step()
-        ctl2.observe_plane(0.030)           # 30 ms projected > 10 ms margin
-        assert margin_ratio(ctl2.deadline, 0.030, 1) < 1.0
-        assert not ctl2.should_continue()
-
-    def test_expired_deadline_stops_and_zero_is_valid(self):
-        ctl = PlaneBudgetController(deadline_ms=0.0)
-        ctl.begin_step()
-        ctl.observe_plane(1e-4)
-        assert not ctl.should_continue()    # margin <= 0: predicted miss
-        with pytest.raises(ValueError):
-            PlaneBudgetController(deadline_ms=-1.0)
-
-    def test_ewma_persists_across_steps(self):
-        """Plane cost is stationary across decode steps: the projection
-        from step 1 informs step 2's very first decision."""
-        ctl = PlaneBudgetController(deadline_ms=5.0, low=1.0, alpha=0.5)
-        ctl.begin_step()
-        ctl.observe_plane(0.050)            # step 1: 50 ms plane
-        ctl.begin_step()                    # step 2, nothing observed yet
-        assert ctl._plane_ewma == pytest.approx(0.050)
-        assert not ctl.should_continue()    # 5 ms budget < 50 ms projection
-        ctl.observe_plane(0.001)
-        assert ctl._plane_ewma == pytest.approx(0.0255)
 
 
 class TestLayeredLinear:
@@ -133,26 +92,36 @@ class TestProgressiveServer:
         assert all(r == 1 for r in stats.released_at_layer)
 
     def test_deadline_ms_bounds_compute(self, rng):
-        """The wall-clock deadline path accumulates planes incrementally:
-        an already-expired deadline computes ONLY the MSB plane, and a
-        generous one reaches full resolution and matches the non-deadline
-        decode."""
+        """The wall-clock deadline path runs each head step as a runtime
+        job: an already-expired deadline releases ONLY the guaranteed
+        resolution-0 minimum, and a generous one reaches the full
+        ``L = 2m - 1`` layered resolution and agrees with the
+        non-deadline decode (up to two-sided quantization)."""
         cfg, params, server, toks = self._setup(rng)
-        _, caches = server.prefill(toks, max_len=16)
-        out, stats = server.decode(toks[:, -1:], caches, 8, 4,
-                                   deadline_ms=0.0)
-        assert out.shape == (2, 4)
-        assert stats.released_at_layer == [1] * 4
-        assert stats.full_resolution == 0
+        with server:
+            _, caches = server.prefill(toks, max_len=16)
+            out, stats = server.decode(toks[:, -1:], caches, 8, 4,
+                                       deadline_ms=0.0)
+            assert out.shape == (2, 4)
+            assert stats.resolutions == 2 * server.m - 1
+            assert stats.released_at_layer == [1] * 4
+            assert stats.full_resolution == 0
+            assert len(stats.head_service_seconds) == 4
 
-        _, caches = server.prefill(toks, max_len=16)
-        out_full, stats_full = server.decode(toks[:, -1:], caches, 8, 4,
-                                             deadline_ms=1e9)
-        assert stats_full.released_at_layer == [server.m] * 4
-        _, caches = server.prefill(toks, max_len=16)
-        out_ref, _ = server.decode(toks[:, -1:], caches, 8, 4)
-        np.testing.assert_array_equal(np.asarray(out_full),
-                                      np.asarray(out_ref))
+            _, caches = server.prefill(toks, max_len=16)
+            out_full, stats_full = server.decode(toks[:, -1:], caches, 8, 4,
+                                                 deadline_ms=1e9)
+            assert (stats_full.released_at_layer
+                    == [2 * server.m - 1] * 4)
+            assert stats_full.full_resolution == 4
+            _, caches = server.prefill(toks, max_len=16)
+            out_ref, _ = server.decode(toks[:, -1:], caches, 8, 4)
+            # the runtime head decomposes BOTH operands (the reference
+            # path only layers W), so argmax can drift on near-ties:
+            # demand near-perfect agreement, not identity
+            agree = int((np.asarray(out_full)
+                         == np.asarray(out_ref)).mean() * 8)
+            assert agree >= 6, (np.asarray(out_full), np.asarray(out_ref))
 
     def test_deeper_budget_closer_to_full(self, rng):
         """Fraction of tokens agreeing with the full-resolution decode

@@ -1,4 +1,10 @@
-"""Eq.(1) load balancing + eqs.(2)-(4) G/G/1 bounds + simulator behaviour."""
+"""Eq.(1) load balancing + eqs.(2)-(4) G/G/1 bounds + simulator behaviour.
+
+The G/G/1 waiting-time term is also the serving gateway's admission
+bound, so beyond the closed forms this file validates it against queue
+waits *measured* on a live gateway fleet (TestGatewayMeasuredWaits)."""
+
+import time
 
 import numpy as np
 import pytest
@@ -72,6 +78,56 @@ class TestQueueingTheory:
         assert b.shape == (3,)
         assert b[0] < b[1] < b[2]
 
+    def test_waiting_time_mm1_closed_form(self):
+        # M/M/1: Marchal's Wq is exact, Wq = rho / (mu - lambda)
+        lam, mu = 0.4, 1.0
+        arrival = queueing.Moments(1 / lam, 2 / lam**2)
+        service = queueing.Moments(1 / mu, 2 / mu**2)
+        rho = lam / mu
+        assert queueing.gg1_waiting_time(arrival, service) == pytest.approx(
+            rho / (mu - lam), rel=1e-9)
+
+    def test_waiting_time_md1_closed_form(self):
+        # M/D/1: deterministic service, Wq = rho / (2 (mu - lambda))
+        lam, mu = 0.5, 1.0
+        arrival = queueing.Moments(1 / lam, 2 / lam**2)
+        service = queueing.Moments(1 / mu, 1 / mu**2)   # zero variance
+        rho = lam / mu
+        assert queueing.gg1_waiting_time(arrival, service) == pytest.approx(
+            rho / (2 * (mu - lam)), rel=1e-9)
+
+    def test_delay_decomposes_into_service_plus_wait(self):
+        arrival = queueing.Moments(3.0, 2 * 9.0)
+        service = queueing.Moments(1.2, 2.0)
+        assert queueing.gg1_delay(arrival, service) == pytest.approx(
+            service.mean + queueing.gg1_waiting_time(arrival, service))
+        # the override swaps only the computational term
+        assert queueing.gg1_delay(arrival, service, 0.9) == pytest.approx(
+            0.9 + queueing.gg1_waiting_time(arrival, service))
+
+    def test_layered_bounds_decompose(self):
+        # eq. (4) = eq. (3)'s layered share + the (layer-independent)
+        # G/G/1 waiting time: the same decomposition the gateway's
+        # admission estimate prices per-resolution
+        from repro.core import layering
+
+        m = 3
+        worker_means = [0.05, 0.08, 0.04]
+        arrival = queueing.Moments(0.5, 0.6)
+        service = queueing.Moments(0.02, 0.0009)
+        b = queueing.layered_delay_bounds(m, worker_means, arrival, service)
+        w = queueing.gg1_waiting_time(arrival, service)
+        rate = queueing.service_rate_bound(worker_means)
+        cum = np.asarray(layering.cumulative_minijobs(m), dtype=np.float64)
+        np.testing.assert_allclose(b, cum / (m * m) / rate + w, rtol=1e-12)
+        assert (np.diff(b) > 0).all()
+
+    def test_waiting_time_zero_at_zero_variability(self):
+        # D/D/1 under rho < 1 never queues
+        arrival = queueing.Moments(2.0, 4.0)
+        service = queueing.Moments(1.0, 1.0)
+        assert queueing.gg1_waiting_time(arrival, service) == 0.0
+
 
 class TestSimulator:
     def test_paper_shape_of_results(self):
@@ -128,3 +184,61 @@ class TestSimulator:
         cfg = simulator.PAPER_SYSTEM
         r = simulator.simulate(cfg, 10, layered=True, seed=6)
         assert r.kappa.sum() == cfg.total_tasks
+
+
+class TestGatewayMeasuredWaits:
+    """Eqs. (2)-(4) against a *live* fleet: the Marchal waiting time the
+    gateway prices into admission, validated on queue waits measured
+    from the gateway's own tickets under seeded Poisson load."""
+
+    def test_measured_queue_waits_match_gg1_waiting_time(self):
+        from repro.runtime import RuntimeConfig, ServingGateway
+
+        cfg = RuntimeConfig(mu=(385.95, 650.92, 373.40), arrival_rate=30.0,
+                            n1=2, n2=2, omega=1.5, m=2, d=8,
+                            complexity=10.0, straggler="exp",
+                            backend="thread", seed=7)
+        rng = np.random.default_rng(7)
+        lim = 1 << (cfg.m * cfg.d - 2)
+
+        def operands():
+            a = rng.integers(-lim, lim, size=(16, cfg.n1 * 4),
+                             dtype=np.int64)
+            b = rng.integers(-lim, lim, size=(16, cfg.n2 * 4),
+                             dtype=np.int64)
+            return a, b
+
+        with ServingGateway(cfg, admission="none") as gw:
+            # calibrate: serial requests measure this fleet's service time
+            warm = [gw.submit(*operands(), deadline=30.0) for _ in range(4)]
+            assert all(t.wait(timeout=60.0) for t in warm)
+            mean_s = float(np.mean(
+                [t.result.released_at - t.result.service_started_at
+                 for t in warm]))
+            # open Poisson stream at rho ~ 0.5; deadlines generous so no
+            # service is truncated (the bound models no termination)
+            gaps = rng.exponential(2.0 * mean_s, size=36)
+            tickets = []
+            for g in gaps:
+                time.sleep(float(g))
+                tickets.append(gw.submit(*operands(), deadline=30.0))
+            assert all(t.wait(timeout=60.0) for t in tickets)
+
+        services = np.array(
+            [t.result.released_at - t.result.service_started_at
+             for t in tickets])
+        gaps_meas = np.diff(np.array([t.arrival for t in tickets]))
+        waits = np.array([t.queue_wait for t in tickets])
+        arrival = queueing.Moments(float(gaps_meas.mean()),
+                                   float((gaps_meas**2).mean()))
+        service = queueing.Moments(float(services.mean()),
+                                   float((services**2).mean()))
+        rho = service.mean / arrival.mean
+        assert 0.2 < rho < 0.95, rho
+        w_pred = queueing.gg1_waiting_time(arrival, service)
+        w_meas = float(waits.mean())
+        assert np.isfinite(w_pred) and w_pred > 0.0
+        # Marchal is a mean approximation and the fleet is not an ideal
+        # single server: demand agreement within a factor of 4
+        assert w_meas <= 4.0 * w_pred, (w_meas, w_pred, rho)
+        assert w_meas >= 0.25 * w_pred, (w_meas, w_pred, rho)
