@@ -21,6 +21,11 @@ comparison by default):
 4. **Result-path compression (socket)** — big coded blocks over the frame
    protocol with compression off vs auto: raw-vs-wire bytes on both
    paths and the measured ratio, the JSON's compression story.
+5. **The zero-copy wire path (PR 9)** — process backend with the
+   shared-memory block arena off vs on (pickled pipe vs descriptor-only
+   dispatch), and socket LRF1 vs LRF2 (all-pickle frames vs out-of-band
+   ndarray buffers): µs/round and bytes-copied, the numbers the
+   regression gate's process-roundtrip budget reads.
 
 The socket rows spawn a
 :class:`repro.runtime.transport.socket_host.LocalCluster` (real worker
@@ -176,6 +181,53 @@ def bench_compression(jobs: int) -> list[dict]:
     return out
 
 
+def bench_wire_path(jobs: int) -> list[dict]:
+    """Zero-copy vs serialized wire paths, µs/round and bytes copied.
+
+    Same no-delay regime as :func:`bench_overhead`, so per-round wall
+    cost is the transport round trip.  For the process pair the only
+    difference is ``shm`` (pickled pipe vs shared-memory arena); for the
+    socket pair it is ``frame_proto`` (LRF1 pickles everything in-band,
+    LRF2 ships ndarray buffers out-of-band), measured over one
+    LocalCluster per variant so each pair negotiates from scratch.
+    """
+    out = []
+    for mode in ("off", "on"):
+        cfg = RuntimeConfig(mu=MU, arrival_rate=1000.0, complexity=0.2,
+                            straggler="none", backend="process", shm=mode,
+                            seed=0)
+        r = _run(cfg, jobs)
+        r["variant"] = f"process-shm-{mode}"
+        r["roundtrip_us_per_round"] = round(
+            r["dispatch_us_per_round"] + r["wait_us_per_round"], 2)
+        ws = r["transport_stats"] or {}
+        print(f"[wire] {r['variant']:>15}: dispatch "
+              f"{r['dispatch_us_per_round']:>8.1f} us/round, roundtrip "
+              f"{r['roundtrip_us_per_round']:>8.1f} us/round, "
+              f"arena/pickle rounds {ws.get('arena_rounds', 0)}/"
+              f"{ws.get('pickle_rounds', 0)}")
+        out.append(r)
+    for proto in (1, 2):
+        with LocalCluster(len(MU)) as cluster:
+            cfg = RuntimeConfig(mu=MU, arrival_rate=1000.0, complexity=0.2,
+                                straggler="none", backend="socket",
+                                hosts=cluster.hosts, frame_proto=proto,
+                                seed=0)
+            r = _run(cfg, jobs)
+        r["variant"] = f"socket-lrf{proto}"
+        r["roundtrip_us_per_round"] = round(
+            r["dispatch_us_per_round"] + r["wait_us_per_round"], 2)
+        ws = r["transport_stats"] or {}
+        copied = ws.get("dispatch_copied_bytes", 0)
+        oob = ws.get("dispatch_oob_bytes", 0)
+        print(f"[wire] {r['variant']:>15}: dispatch "
+              f"{r['dispatch_us_per_round']:>8.1f} us/round, roundtrip "
+              f"{r['roundtrip_us_per_round']:>8.1f} us/round, copied "
+              f"{copied / 1e6:.2f} MB, out-of-band {oob / 1e6:.2f} MB")
+        out.append(r)
+    return out
+
+
 def bench_deadline_race(jobs: int) -> dict:
     """Fig. 5 qualitative claim, process backend: res-0 beats a deadline
     the final resolution misses."""
@@ -271,6 +323,7 @@ def main(argv=None) -> int:
         "jobs": args.jobs,
         "mu": list(MU),
         "overhead": bench_overhead(args.jobs),
+        "wire_path": bench_wire_path(args.jobs),
         "regimes": bench_regimes(args.jobs),
         "deadline_race": bench_deadline_race(args.jobs),
         "chaos": bench_chaos(max(20, args.jobs // 2)),

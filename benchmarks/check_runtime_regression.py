@@ -13,8 +13,16 @@ comparable across machines of the same class: regenerate it
 whenever the CI runner class changes, and treat a uniform shift across
 all three scenarios as a machine change, not a code regression.
 
+When a fresh transport bench artifact is available (``--transport-new``,
+skipped with a note when absent so the gate still runs standalone), the
+zero-copy wire path is gated too: the process backend's shm-on roundtrip
+must not regress vs the committed ``benchmarks/BENCH_transport.json``
+beyond the same budget, and the arena must actually have carried the
+rounds — a silent fall-back to the pickled path is a perf regression by
+another name.
+
 Run:  PYTHONPATH=src python benchmarks/check_runtime_regression.py \
-          --new BENCH_runtime.json
+          --new BENCH_runtime.json [--transport-new BENCH_transport.json]
 """
 
 from __future__ import annotations
@@ -25,6 +33,7 @@ import pathlib
 import sys
 
 BASELINE = pathlib.Path(__file__).parent / "BENCH_runtime.baseline.json"
+TRANSPORT_BASELINE = pathlib.Path(__file__).parent / "BENCH_transport.json"
 
 
 def res0_mean_delay(scenario: dict) -> float:
@@ -81,6 +90,55 @@ def check_tracing_overhead(new: dict, max_overhead_us: float) -> list[str]:
     return []
 
 
+def _wire_variant(report: dict, variant: str) -> dict | None:
+    return next((r for r in report.get("wire_path", [])
+                 if r.get("variant") == variant), None)
+
+
+def check_process_roundtrip(new_path: str, baseline_path: str,
+                            max_regress: float) -> list[str]:
+    """Gate the shm-on process roundtrip against the committed artifact.
+
+    Skips (with a note) when either artifact or its ``wire_path``
+    section is absent — the transport bench runs on a separate CI step
+    and older artifacts predate the section.
+    """
+    new_file = pathlib.Path(new_path)
+    if not new_file.exists():
+        print(f"[check] wire_path: {new_path} absent (transport bench "
+              f"not run), skipping")
+        return []
+    new = json.loads(new_file.read_text())
+    base = json.loads(pathlib.Path(baseline_path).read_text())
+    n = _wire_variant(new, "process-shm-on")
+    b = _wire_variant(base, "process-shm-on")
+    if n is None or b is None:
+        print("[check] wire_path: process-shm-on row absent (pre-arena "
+              "artifact), skipping")
+        return []
+    failures = []
+    b_us = float(b["roundtrip_us_per_round"])
+    n_us = float(n["roundtrip_us_per_round"])
+    ratio = n_us / b_us if b_us > 0 else float("inf")
+    status = "OK" if ratio <= 1.0 + max_regress else "REGRESSED"
+    print(f"[check] wire_path process-shm-on: roundtrip {b_us:.1f} -> "
+          f"{n_us:.1f} us/round ({ratio:.2f}x)  {status}")
+    if ratio > 1.0 + max_regress:
+        failures.append(
+            f"process shm roundtrip {ratio:.2f}x baseline "
+            f"(budget {1.0 + max_regress:.2f}x)")
+    ws = n.get("transport_stats") or {}
+    arena, pickled = ws.get("arena_rounds", 0), ws.get("pickle_rounds", 0)
+    if not arena or pickled > arena:
+        failures.append(
+            f"shm-on run was not arena-carried (arena_rounds={arena}, "
+            f"pickle_rounds={pickled}) — ring sizing or attach regressed")
+    else:
+        print(f"[check] wire_path process-shm-on: arena carried "
+              f"{arena}/{arena + pickled} dispatches  OK")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--new", default="BENCH_runtime.json",
@@ -91,12 +149,19 @@ def main(argv=None) -> int:
     ap.add_argument("--max-trace-overhead-us", type=float, default=50.0,
                     help="budget for enabled-tracing cost per round "
                          "(microseconds)")
+    ap.add_argument("--transport-new", default="BENCH_transport.json",
+                    help="fresh transport bench artifact (skipped with a "
+                         "note when absent)")
+    ap.add_argument("--transport-baseline", default=str(TRANSPORT_BASELINE))
     args = ap.parse_args(argv)
 
     baseline = json.loads(pathlib.Path(args.baseline).read_text())
     new = json.loads(pathlib.Path(args.new).read_text())
     failures = compare(baseline, new, args.max_regress)
     failures += check_tracing_overhead(new, args.max_trace_overhead_us)
+    failures += check_process_roundtrip(args.transport_new,
+                                        args.transport_baseline,
+                                        args.max_regress)
     if failures:
         print("[check] FAIL:\n  " + "\n  ".join(failures), file=sys.stderr)
         return 1

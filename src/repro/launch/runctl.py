@@ -42,7 +42,8 @@ import sys
 import numpy as np
 
 from repro.core import simulator
-from repro.runtime import (BACKEND_NAMES, FAULT_POLICIES, POLICIES,
+from repro.runtime import (BACKEND_NAMES, FAULT_POLICIES, FRAME_PROTOS,
+                           POLICIES, SHM_MODES,
                            RuntimeConfig, delay_table,
                            format_controller_trace, format_delay_table,
                            format_stage_table, run_jobs)
@@ -82,7 +83,9 @@ def build_config(args: argparse.Namespace,
         use_jax_devices=args.jax_devices,
         hosts=(hosts if hosts is not None
                else tuple(h for h in args.hosts.split(",") if h)),
-        compress=args.compress, trace=_wants_trace(args), seed=args.seed,
+        compress=args.compress, shm=args.shm,
+        frame_proto=args.frame_proto,
+        trace=_wants_trace(args), seed=args.seed,
         fault_policy=args.fault_policy,
         heartbeat_interval=args.heartbeat_interval,
         heartbeat_timeout=args.heartbeat_timeout,
@@ -206,6 +209,19 @@ def main(argv=None) -> int:
                     help="socket backend frame compression (auto = "
                          "compress big payloads with the best available "
                          "codec)")
+    ap.add_argument("--shm", choices=SHM_MODES, default="auto",
+                    help="process backend: shared-memory block arenas "
+                         "(zero-copy dispatch/results over descriptors; "
+                         "auto = on when available, falling back to "
+                         "pickled pipes; on = required, raise if arenas "
+                         "cannot be created)")
+    ap.add_argument("--frame-proto", type=int, choices=FRAME_PROTOS,
+                    default=0, dest="frame_proto",
+                    help="socket backend frame protocol: 0 = negotiate "
+                         "the newest both sides speak (LRF2 when "
+                         "possible), 1 = force LRF1 (one pickle per "
+                         "frame, mixed-version escape hatch), 2 = "
+                         "require LRF2 (pickle-free ndarray frames)")
     ap.add_argument("--fault-policy", choices=FAULT_POLICIES,
                     default="fail-fast",
                     help="worker-loss handling: fail-fast raises on any "

@@ -112,7 +112,19 @@ class FusionNode:
             self._current = rf
         return rf
 
-    def post(self, result: TaskResult) -> None:
+    def post(self, result: TaskResult) -> bool:
+        """Route one result; returns True iff it was accepted.
+
+        The verdict is the round's dedupe/staleness decision (late,
+        purged, or duplicate ``task_id`` -> False), and it is the *only*
+        point that decides whether a result's value will ever be read
+        again: an accepted value is copied out at decode
+        (:meth:`RoundFusion.decode` stacks), a rejected one is never
+        dereferenced.  Transports with zero-copy result buffers key their
+        slot accounting on this verdict — a rejected arena view pins
+        nothing, so its slot is reclaimable the moment the purge
+        watermark passes it.
+        """
         with self._lock:
             rf = self._current
         if (rf is None
@@ -126,6 +138,8 @@ class FusionNode:
                                   job=result.job_id, round=result.round_idx,
                                   task=result.task_id,
                                   worker=result.worker_id)
+            return False
+        return True
 
 
 class LayeredResult:

@@ -624,7 +624,19 @@ class Master:
                         tr.emit(telemetry.ROUND, t_disp, tw - t_disp,
                                 job=job.job_id, round=ridx,
                                 label="fused" if fused else "purged")
-                    pool.purge_round(ctx)  # reclaim the round's stragglers
+                    # reclaim the round's stragglers.  View-lifetime
+                    # invariant for zero-copy transports: this round's
+                    # accepted results are NOT yet decoded (decode rides
+                    # one iteration behind, see ``pending``), so its
+                    # purge must not recycle their result slots — only
+                    # strictly older rounds', which this same loop
+                    # already decoded (finish_round(r-1) above precedes
+                    # purge(r) on this thread, hence precedes purge(r+1)
+                    # a fortiori).  Dispatch-slot reuse is safe
+                    # immediately: a straggler still reading a recycled
+                    # block can only produce a result fusion rejects
+                    # without dereferencing.
+                    pool.purge_round(ctx)
                     # feed the controller this round's signals; a retune
                     # takes effect from the NEXT encode (the buffered
                     # round keeps the geometry it was encoded with)
@@ -690,8 +702,10 @@ class Master:
         finally:
             pool.shutdown()
 
-        # transports that cross a wire expose frame/byte/compression
-        # counters (socket backend); in-process ones have nothing to say
+        # transports that cross a wire expose frame/byte counters and the
+        # zero-copy ledger (process: arena vs pickle rounds; socket:
+        # serialization-copied vs out-of-band bytes, negotiated frame
+        # protocol); purely in-process backends leave this None
         transport_stats = getattr(pool, "wire_stats", None)
 
         J = len(starts_l)

@@ -35,8 +35,9 @@ import numpy as np
 from repro.core import coding, layering, scheduling
 
 __all__ = ["RuntimeConfig", "JobSpec", "RoundContext", "RoundBatch",
-           "TaskResult", "WireBatch", "BACKEND_NAMES", "COMPRESS_MODES",
-           "FAULT_POLICIES"]
+           "TaskResult", "WireBatch", "ArenaSlice", "ArenaBatchRef",
+           "ArenaResultRef", "BACKEND_NAMES", "COMPRESS_MODES",
+           "FAULT_POLICIES", "SHM_MODES", "FRAME_PROTOS"]
 
 #: Worker-transport backends the runtime can dispatch over (see
 #: :mod:`repro.runtime.transport`).
@@ -54,6 +55,20 @@ FAULT_POLICIES = ("fail-fast", "degrade")
 #: compresses payloads above a size threshold with the best available
 #: codec, ``zlib``/``lz4`` force one codec, ``none`` disables.
 COMPRESS_MODES = ("auto", "none", "zlib", "lz4")
+
+#: Shared-memory arena modes for the process backend (see
+#: :mod:`repro.runtime.transport.shm`): ``auto`` uses the zero-copy block
+#: arena when the platform supports it and silently falls back to the
+#: pickled pipe path otherwise; ``on`` requires it (construction fails
+#: where shared memory is unavailable); ``off`` disables it.
+SHM_MODES = ("auto", "on", "off")
+
+#: Socket frame protocol selection: ``0`` negotiates the highest version
+#: both ends speak (LRF2 against a current worker host, LRF1 against an
+#: older one); ``1``/``2`` pin the offered protocol (``1`` = the pickled
+#: LRF1 frames every release speaks, ``2`` = zero-copy LRF2 ndarray
+#: frames).
+FRAME_PROTOS = (0, 1, 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +113,8 @@ class RuntimeConfig:
     use_jax_devices: bool = False  # legacy alias for backend="jax"
     hosts: tuple[str, ...] = ()    # socket backend: "host:port" per worker
     compress: str = "auto"         # socket frame codec: COMPRESS_MODES key
+    shm: str = "auto"              # process backend arena: SHM_MODES key
+    frame_proto: int = 0           # socket frame protocol: FRAME_PROTOS key
     fault_policy: str = "fail-fast"   # worker loss: FAULT_POLICIES key
     heartbeat_interval: float = 1.0   # socket: seconds between pings
     heartbeat_timeout: float = 15.0   # socket: silence -> worker dead
@@ -141,6 +158,28 @@ class RuntimeConfig:
             raise ValueError(
                 f"hosts= is only meaningful with backend='socket' "
                 f"(got backend={self.backend!r})")
+        if self.shm not in SHM_MODES:
+            raise ValueError(f"unknown shm mode {self.shm!r}; "
+                             f"known: {SHM_MODES}")
+        if self.shm == "on" and self.backend != "process":
+            # "on" is a hard requirement for the shared-memory arena,
+            # which only the process backend implements; with any other
+            # backend it would be silently ignored — reject the
+            # contradiction, mirroring the hosts= rule ("auto"/"off" are
+            # fine anywhere: no-ops off the process backend)
+            raise ValueError(
+                f"shm='on' is only meaningful with backend='process' "
+                f"(got backend={self.backend!r})")
+        if self.frame_proto not in FRAME_PROTOS:
+            raise ValueError(f"unknown frame_proto {self.frame_proto!r}; "
+                             f"known: {FRAME_PROTOS}")
+        if self.frame_proto and self.backend != "socket":
+            # a pinned frame protocol with a non-socket backend would be
+            # silently ignored — reject the contradiction (0 = negotiate
+            # is the anywhere-safe default)
+            raise ValueError(
+                f"frame_proto={self.frame_proto} is only meaningful with "
+                f"backend='socket' (got backend={self.backend!r})")
         if self.fault_policy not in FAULT_POLICIES:
             raise ValueError(f"unknown fault policy {self.fault_policy!r}; "
                              f"known: {FAULT_POLICIES}")
@@ -441,3 +480,79 @@ class TaskResult:
         return TaskResult(job_id=job_id, round_idx=round_idx,
                           task_id=task_id, worker_id=worker_id,
                           value=value, finished_at=finished_at)
+
+
+# -- shared-memory arena descriptors ------------------------------------------
+#
+# The zero-copy twins of WireBatch / TaskResult.to_wire(): when master and
+# worker share a BlockArena (repro.runtime.transport.shm), the pipe
+# carries only these descriptors — a few ints and a dtype string — and
+# each side maps the block payloads as ndarray views into the arena.
+# ``seq`` plays double duty: the purge watermark AND the ring-allocator
+# reclamation key, so slot lifetime rides the purge protocol that already
+# exists.
+
+@dataclasses.dataclass(frozen=True)
+class ArenaSlice:
+    """One block's location in a shared-memory arena (wire descriptor).
+
+    ``dtype`` is the numpy dtype *string* (``'<f8'``), not the dtype
+    object, so the descriptor pickles as pure primitives.
+    """
+
+    offset: int             # byte offset into the arena segment
+    shape: tuple[int, ...]  # ndarray shape of the block
+    dtype: str              # np.dtype(...).str
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.dtype(self.dtype).itemsize * math.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaBatchRef:
+    """Descriptor form of :class:`WireBatch`: blocks live in the dispatch
+    arena, only ``delays`` (a ``(n,)`` float vector) rides the pipe."""
+
+    seq: int
+    job_id: int
+    round_idx: int
+    first_task_id: int
+    x: ArenaSlice           # (n, K, M/n1) coded A blocks, in the arena
+    y: ArenaSlice           # (n, K, N/n2) coded B blocks, in the arena
+    delays: np.ndarray      # (n,) injected straggler delays (seconds)
+
+    @property
+    def count(self) -> int:
+        return self.x.shape[0]
+
+    def to_batch(self, arena) -> "WireBatch":
+        """Materialize as a :class:`WireBatch` of views into ``arena``
+        (any object with a ``view(ArenaSlice) -> ndarray`` method)."""
+        return WireBatch(seq=self.seq, job_id=self.job_id,
+                         round_idx=self.round_idx,
+                         first_task_id=self.first_task_id,
+                         x=arena.view(self.x), y=arena.view(self.y),
+                         delays=self.delays)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaResultRef:
+    """Descriptor form of a result envelope: the value matrix lives in
+    the worker's result arena (the compute kernel wrote it there)."""
+
+    job_id: int
+    round_idx: int
+    task_id: int
+    worker_id: int
+    seq: int                # dispatch seq of the result's round
+    value: ArenaSlice       # (M/n1, N/n2) product block, in the arena
+    finished_at: float      # worker-side time.monotonic
+
+    def to_result(self, arena) -> "TaskResult":
+        """Materialize as a :class:`TaskResult` whose value is a zero-copy
+        view into ``arena`` — handed straight to the fusion sink."""
+        return TaskResult(job_id=self.job_id, round_idx=self.round_idx,
+                          task_id=self.task_id, worker_id=self.worker_id,
+                          value=arena.view(self.value),
+                          finished_at=self.finished_at)

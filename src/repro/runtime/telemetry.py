@@ -49,7 +49,7 @@ __all__ = [
     "PREP", "ENCODE", "DISPATCH", "ROUND", "DECODE", "RESOLUTION", "JOB",
     "RETUNE", "TASK", "RESULT", "FUSED", "STALE", "HEARTBEAT", "RECONNECT",
     "DEAD", "QUARANTINE", "READMIT", "REDISPATCH", "REQUEST", "ADMIT",
-    "RELEASE", "serve_metrics", "worker_metrics_text",
+    "RELEASE", "ARENA", "serve_metrics", "worker_metrics_text",
 ]
 
 clock = time.monotonic
@@ -83,6 +83,11 @@ READMIT = "readmit"        # instant: quarantined worker rejoined (socket
 #                            reconnect + hello/watermark resync)
 REDISPATCH = "redispatch"  # instant: a lost slice re-sent to a survivor;
 #                            value = task count, worker = new owner
+# Zero-copy wire path (repro.runtime.transport.shm):
+ARENA = "arena"            # instant: arena event; label = reclaim (slots
+#                            recycled at a purge; value = peak dispatch-
+#                            ring occupancy fraction) | fallback (ring
+#                            full, slice took the pickled pipe path)
 # Serving gateway (repro.runtime.gateway, one lifecycle per request):
 REQUEST = "request"        # span: submit -> client release; label =
 #                            admitted|down-resolved|rejected[/degraded],
@@ -95,7 +100,7 @@ RELEASE = "release"        # instant: client release (deadline fire or
 SPAN_KINDS = frozenset({PREP, ENCODE, ROUND, DECODE, JOB, TASK, REQUEST})
 INSTANT_KINDS = frozenset({DISPATCH, RESOLUTION, RETUNE, RESULT, FUSED,
                            STALE, HEARTBEAT, RECONNECT, DEAD, QUARANTINE,
-                           READMIT, REDISPATCH, ADMIT, RELEASE})
+                           READMIT, REDISPATCH, ADMIT, RELEASE, ARENA})
 EVENT_KINDS = SPAN_KINDS | INSTANT_KINDS
 
 

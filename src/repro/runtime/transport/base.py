@@ -140,6 +140,14 @@ class WorkerTransport(abc.ABC):
     #: Registry key (``RuntimeConfig.backend`` value) for this backend.
     name: str = "abstract"
 
+    #: Wire-path accounting.  Transports that move data across a process
+    #: or network boundary override this (as a property) with a dict of
+    #: plain counters — frames/bytes per path, serialization-copied vs
+    #: zero-copy splits; the master surfaces it as
+    #: ``RuntimeResult.transport_stats``.  Purely in-process backends
+    #: (thread, jax) have no wire and leave it ``None``.
+    wire_stats: Optional[dict] = None
+
     def __init__(self, cfg: RuntimeConfig,
                  sink: Callable[[TaskResult], None],
                  rng: Optional[np.random.Generator] = None,

@@ -44,8 +44,29 @@ Frame layout (16-byte header, network byte order)::
     ┌──────┬────┬─────┬──────┬─────────┬─────────┐
     │MAGIC │ver │codec│ rsvd │ raw_len │wire_len │ payload (wire_len B)
     └──────┴────┴─────┴──────┴─────────┴─────────┘
-    MAGIC = b"LRF1"; codec ∈ {none, zlib, lz4}; raw_len is the
-    decompressed pickle size (integrity-checked after decode).
+    MAGIC = b"LRF1" (v1) or b"LRF2" (v2); codec ∈ {none, zlib, lz4};
+    raw_len is the decompressed payload size (integrity-checked).
+
+An **LRF1** payload is one pickle of the message.  An **LRF2** payload
+is pickle-free for ndarray data::
+
+    ┌─────────┬──────┬────────────┬──────┬─────────────────┐
+    │meta_len │ nbuf │ nbuf × len │ meta │ buffers ...     │
+    │   u32   │ u16  │    u64     │      │ (raw C order)   │
+    └─────────┴──────┴────────────┴──────┴─────────────────┘
+
+``meta`` is the message tuple pickled at protocol 5 with a
+``buffer_callback``, so every contiguous ndarray (the coded blocks, the
+result matrices) is lifted *out of the pickle stream*: its dtype, shape,
+and contiguity ride in ``meta`` (numpy's reconstructor) while the bytes
+themselves are appended as raw buffers — memoryviews over the original
+arrays, handed straight to the compressor / socket with no intermediate
+serialization copy.  Control messages (purge, ping, stats) simply have
+``nbuf = 0`` and stay pure pickle.  The protocol is negotiated in the
+hello (see :func:`serve_worker_host`): LRF1 peers remain readable for
+one release, and a v2-offering master fails clean — a clear
+``ConnectionError``, not a garbled stream — against a worker host that
+predates the offer.
 
 The worker-side event loop *is* the process backend's
 (:class:`~repro.runtime.transport.process._WorkerLoop` over a socket
@@ -88,7 +109,7 @@ from repro.runtime.transport.base import WorkerTransport
 from repro.runtime.transport.process import _WorkerLoop
 
 __all__ = ["SocketTransport", "LocalCluster", "FrameError", "encode_frame",
-           "decode_frame", "serve_worker_host", "MAGIC", "CODECS"]
+           "decode_frame", "serve_worker_host", "MAGIC", "MAGIC2", "CODECS"]
 
 clock = time.monotonic
 
@@ -96,6 +117,11 @@ clock = time.monotonic
 
 MAGIC = b"LRF1"
 _VERSION = 1
+MAGIC2 = b"LRF2"
+_VERSION2 = 2
+#: LRF2 payload prologue: meta_len(4) nbuf(2), then nbuf u64 buffer lens
+_V2HEAD = struct.Struct("!IH")
+_V2LEN = struct.Struct("!Q")
 #: header: magic(4) version(1) codec(1) reserved(2) raw_len(4) wire_len(4)
 _HEADER = struct.Struct("!4sBBHII")
 HEADER_SIZE = _HEADER.size
@@ -145,37 +171,130 @@ def _decompress(payload: bytes, codec: int) -> bytes:
     return payload
 
 
-def encode_frame(obj, compress: str = "auto") -> bytes:
+def _pick_codec(compress: str, raw_len: int) -> int:
+    """Codec id for ``compress`` mode and a payload of ``raw_len``."""
+    if compress == "zlib":
+        return CODEC_ZLIB
+    if compress == "lz4":
+        if _lz4 is None:
+            raise ValueError("compress='lz4' but lz4 is not installed; "
+                             "use 'zlib' or 'auto'")
+        return CODEC_LZ4
+    if compress == "auto" and raw_len >= COMPRESS_MIN_BYTES:
+        return CODEC_LZ4 if _lz4 is not None else CODEC_ZLIB
+    if compress not in ("auto", "none"):
+        raise ValueError(f"unknown compress mode {compress!r}")
+    return CODEC_NONE
+
+
+def _compress_parts(parts: list, codec: int) -> bytes:
+    """Compress a multi-part payload without first joining it.
+
+    The zlib path streams each part through one ``compressobj`` — the
+    ndarray memoryviews feed the compressor directly, so the only copy
+    of the block bytes is the compressed output itself.  (lz4's one-shot
+    API wants a single buffer; it pays the join.)
+    """
+    if codec == CODEC_ZLIB:
+        z = zlib.compressobj(1)
+        out = [z.compress(p) for p in parts]
+        out.append(z.flush())
+        return b"".join(out)
+    return _compress(b"".join(parts), codec)
+
+
+def _encode_v2_parts(obj) -> tuple:
+    """LRF2 payload for ``obj``: ``(parts, inband_len, oob_len)``.
+
+    ``parts`` is a flat list of buffers (prologue + meta pickle + raw
+    ndarray buffers); ``inband_len`` is what went *through* the pickler
+    (prologue + meta), ``oob_len`` the ndarray bytes that did not.
+    """
+    bufs: list[pickle.PickleBuffer] = []
+    meta = pickle.dumps(obj, protocol=5, buffer_callback=bufs.append)
+    raws = [b.raw() for b in bufs]
+    head = (_V2HEAD.pack(len(meta), len(raws))
+            + b"".join(_V2LEN.pack(r.nbytes) for r in raws))
+    parts = [head, meta]
+    parts.extend(raws)
+    return parts, len(head) + len(meta), sum(r.nbytes for r in raws)
+
+
+def _decode_v2_payload(payload: bytes):
+    """Rebuild the message from a (decompressed) LRF2 payload.
+
+    ndarrays come back as zero-copy views over ``payload``'s memory
+    (read-only is fine: results are only ever read by fusion).
+    """
+    try:
+        mv = memoryview(payload)
+        meta_len, nbuf = _V2HEAD.unpack_from(mv, 0)
+        off = _V2HEAD.size
+        lens = [_V2LEN.unpack_from(mv, off + i * _V2LEN.size)[0]
+                for i in range(nbuf)]
+        off += nbuf * _V2LEN.size
+        meta = mv[off:off + meta_len]
+        if len(meta) != meta_len:
+            raise FrameError("LRF2 payload truncated inside meta")
+        off += meta_len
+        buffers = []
+        for n in lens:
+            buf = mv[off:off + n]
+            if len(buf) != n:
+                raise FrameError("LRF2 payload truncated inside buffers")
+            buffers.append(buf)
+            off += n
+        return pickle.loads(meta, buffers=buffers)
+    except FrameError:
+        raise
+    except Exception as e:
+        raise FrameError(f"corrupt LRF2 payload: {e}") from None
+
+
+def _encode_frame_info(obj, compress: str = "auto", proto: int = 1
+                       ) -> tuple:
+    """Encode ``obj``; returns ``(parts, raw_len, inband, oob)``.
+
+    ``parts[0]`` is the 16-byte header; the rest is the (possibly
+    compressed) payload.  ``inband``/``oob`` split the raw payload into
+    pickled bytes vs out-of-band ndarray buffer bytes (LRF1 is all
+    in-band by construction).
+    """
+    if proto not in (1, 2):
+        raise ValueError(f"unknown frame proto {proto} (LRF1 or LRF2)")
+    if proto == 2:
+        magic, version = MAGIC2, _VERSION2
+        payload_parts, inband, oob = _encode_v2_parts(obj)
+        raw_len = inband + oob
+    else:
+        magic, version = MAGIC, _VERSION
+        payload_parts = [pickle.dumps(obj, protocol=5)]
+        raw_len = inband = len(payload_parts[0])
+        oob = 0
+    codec = _pick_codec(compress, raw_len)
+    if codec != CODEC_NONE:
+        packed = _compress_parts(payload_parts, codec)
+        if len(packed) < raw_len:
+            payload_parts = [packed]
+        else:                      # incompressible: ship raw, save the CPU
+            codec = CODEC_NONE
+    wire_len = sum(len(p) for p in payload_parts)
+    header = _HEADER.pack(magic, version, codec, 0, raw_len, wire_len)
+    return [header] + payload_parts, raw_len, inband, oob
+
+
+def encode_frame(obj, compress: str = "auto", proto: int = 1) -> bytes:
     """Serialize ``obj`` into one self-describing frame.
 
     ``compress`` is a :data:`~repro.runtime.tasks.COMPRESS_MODES` key:
     ``auto`` compresses payloads >= :data:`COMPRESS_MIN_BYTES` with lz4
     when available (fast path) else zlib, and keeps the compressed form
     only if it is actually smaller; ``zlib``/``lz4`` force the codec;
-    ``none`` disables.
+    ``none`` disables.  ``proto`` selects the frame protocol: 1 = LRF1
+    (one pickle), 2 = LRF2 (pickle-free ndarray buffers).
     """
-    payload = pickle.dumps(obj, protocol=4)
-    raw_len = len(payload)
-    codec = CODEC_NONE
-    if compress == "zlib":
-        codec = CODEC_ZLIB
-    elif compress == "lz4":
-        if _lz4 is None:
-            raise ValueError("compress='lz4' but lz4 is not installed; "
-                             "use 'zlib' or 'auto'")
-        codec = CODEC_LZ4
-    elif compress == "auto" and raw_len >= COMPRESS_MIN_BYTES:
-        codec = CODEC_LZ4 if _lz4 is not None else CODEC_ZLIB
-    elif compress not in ("auto", "none"):
-        raise ValueError(f"unknown compress mode {compress!r}")
-    if codec != CODEC_NONE:
-        packed = _compress(payload, codec)
-        if len(packed) < raw_len:
-            payload = packed
-        else:                      # incompressible: ship raw, save the CPU
-            codec = CODEC_NONE
-    header = _HEADER.pack(MAGIC, _VERSION, codec, 0, raw_len, len(payload))
-    return header + payload
+    parts, _, _, _ = _encode_frame_info(obj, compress, proto)
+    return b"".join(parts)
 
 
 def decode_frame(buf: bytes) -> tuple:
@@ -190,10 +309,12 @@ def decode_frame(buf: bytes) -> tuple:
                          f"bytes")
     magic, version, codec, _, raw_len, wire_len = _HEADER.unpack(
         buf[:HEADER_SIZE])
-    if magic != MAGIC:
-        raise FrameError(f"bad magic {magic!r} (expected {MAGIC!r})")
-    if version != _VERSION:
-        raise FrameError(f"unsupported frame version {version}")
+    if magic not in (MAGIC, MAGIC2):
+        raise FrameError(f"bad magic {magic!r} (expected {MAGIC!r} or "
+                         f"{MAGIC2!r})")
+    if version != (_VERSION2 if magic == MAGIC2 else _VERSION):
+        raise FrameError(f"unsupported frame version {version} for "
+                         f"magic {magic!r}")
     if codec not in (CODEC_NONE, CODEC_ZLIB, CODEC_LZ4):
         raise FrameError(f"unknown codec {codec}")
     end = HEADER_SIZE + wire_len
@@ -212,6 +333,8 @@ def decode_frame(buf: bytes) -> tuple:
     if len(payload) != raw_len:
         raise FrameError(f"decompressed size {len(payload)} != header "
                          f"raw_len {raw_len}")
+    if magic == MAGIC2:
+        return _decode_v2_payload(payload), end
     try:
         obj = pickle.loads(payload)
     except Exception as e:
@@ -252,12 +375,18 @@ class _SockConn:
     def __init__(self, sock: socket.socket, compress: str = "auto"):
         self.sock = sock
         self.compress = compress
+        #: Negotiated frame protocol for *outbound* frames (1 until the
+        #: hello exchange agrees on something newer); inbound frames are
+        #: always self-describing, so both magics decode regardless.
+        self.proto = 1
         self.frames_in = 0
         self.frames_out = 0
         self.raw_bytes_in = 0
         self.wire_bytes_in = 0
         self.raw_bytes_out = 0
         self.wire_bytes_out = 0
+        self.inband_bytes_out = 0    # raw bytes that crossed the pickler
+        self.oob_bytes_out = 0       # raw bytes lifted out of it (LRF2)
 
     def poll(self, timeout: float = 0.0) -> bool:
         try:
@@ -269,7 +398,8 @@ class _SockConn:
     def recv(self):
         header = _read_exact(self.sock, HEADER_SIZE)
         magic, version, codec, _, raw_len, wire_len = _HEADER.unpack(header)
-        if magic != MAGIC or version != _VERSION:
+        if not ((magic == MAGIC and version == _VERSION)
+                or (magic == MAGIC2 and version == _VERSION2)):
             raise FrameError(f"bad frame header from peer: magic={magic!r} "
                              f"version={version}")
         payload = _read_exact(self.sock, wire_len)
@@ -280,11 +410,23 @@ class _SockConn:
         return obj
 
     def send(self, obj) -> None:
-        frame = encode_frame(obj, self.compress)
-        self.sock.sendall(frame)
+        parts, raw_len, inband, oob = _encode_frame_info(
+            obj, self.compress, self.proto)
+        # scatter-gather write: LRF2's ndarray buffers go to the kernel
+        # straight from the arrays, never joined into one frame buffer
+        vecs = [memoryview(p) for p in parts if len(p)]
+        while vecs:
+            sent = self.sock.sendmsg(vecs)
+            while vecs and sent >= len(vecs[0]):
+                sent -= len(vecs[0])
+                vecs.pop(0)
+            if sent and vecs:
+                vecs[0] = vecs[0][sent:]
         self.frames_out += 1
-        self.wire_bytes_out += len(frame)
-        self.raw_bytes_out += _HEADER.unpack(frame[:HEADER_SIZE])[4]
+        self.wire_bytes_out += sum(len(p) for p in parts)
+        self.raw_bytes_out += raw_len
+        self.inband_bytes_out += inband
+        self.oob_bytes_out += oob
 
     def close(self) -> None:
         try:
@@ -385,8 +527,16 @@ def serve_worker_host(port: int = 0, host: str = "127.0.0.1", *,
                 hello = conn.recv()
                 if not (isinstance(hello, tuple) and hello[0] == "hello"):
                     raise FrameError(f"expected hello, got {hello!r}")
-                _, worker_id, cfg, sid, master_watermark = hello
+                _, worker_id, cfg, sid, master_watermark, *rest = hello
                 conn.compress = cfg.compress
+                if rest:
+                    # frame-protocol offer (6-element hello): agree on
+                    # the newest protocol both sides speak.  The ack is
+                    # sent *before* switching, so it is always readable
+                    # by the offering master whatever was agreed.
+                    agreed = max(1, min(2, int(rest[0])))
+                    conn.send(("helloack", agreed))
+                    conn.proto = agreed
                 loop = _SocketWorkerLoop(worker_id, cfg, conn,
                                          _ConnResults(conn))
                 if sid == session_id and runner is not None:
@@ -449,7 +599,7 @@ class _WorkerLink:
         self.last_seen = clock()
         self.dead: Optional[str] = None  # reason, once declared dead
         self.got_stats = threading.Event()
-        self._closed_conn_stats = np.zeros(6, dtype=np.int64)
+        self._closed_conn_stats = np.zeros(8, dtype=np.int64)
         # clock alignment: offset = worker_clock - master_clock, taken
         # from the minimum-RTT ping/pong exchange so the error is bounded
         # by rtt/2 (<= clock_rtt); refreshed by every heartbeat pong
@@ -492,9 +642,46 @@ class _WorkerLink:
             self.last_seen = clock()
 
     def _hello(self) -> None:
+        """Session hello + frame-protocol negotiation.
+
+        ``cfg.frame_proto`` 0 (auto) or 2 offers LRF2 in a 6-element
+        hello and *requires* the worker's ``helloack`` (sent as LRF1, so
+        it is readable before any switch): a worker host that predates
+        the offer never answers — its parse of the longer hello fails —
+        and the bounded wait turns that into a clean ``ConnectionError``
+        instead of a garbled-stream death mid-run.  ``frame_proto=1``
+        sends the legacy 5-element hello: no ack, pure LRF1, the
+        mixed-version escape hatch for one release.
+        """
         t = self.transport
+        offer = t._cfg.frame_proto or 2
+        if offer <= 1:
+            self.conn.send(("hello", self.worker_id, t._cfg, t._session,
+                            t._watermark))
+            self.conn.proto = 1
+            return
         self.conn.send(("hello", self.worker_id, t._cfg, t._session,
-                        t._watermark))
+                        t._watermark, offer))
+        if not self.conn.poll(5.0):
+            raise ConnectionError(
+                f"worker {self.worker_id} at {self.host}:{self.port} did "
+                f"not acknowledge the LRF{offer} offer within 5s — the "
+                f"host likely predates frame protocol {offer}; upgrade "
+                f"it or run with frame_proto=1")
+        try:
+            ack = self.conn.recv()
+        except (EOFError, OSError, FrameError) as e:
+            raise ConnectionError(
+                f"worker {self.worker_id} at {self.host}:{self.port} "
+                f"closed or garbled the hello exchange ({e}) — mixed "
+                f"frame-protocol versions? upgrade the host or run with "
+                f"frame_proto=1") from None
+        if not (isinstance(ack, tuple) and ack[0] == "helloack"
+                and int(ack[1]) in (1, 2)):
+            raise ConnectionError(
+                f"worker {self.worker_id} at {self.host}:{self.port} "
+                f"answered the hello with {ack!r}, not a helloack")
+        self.conn.proto = int(ack[1])
 
     def sync_clock(self, samples: int = 5) -> None:
         """Estimate this link's clock offset with synchronous ping/pong
@@ -588,18 +775,20 @@ class _WorkerLink:
         must not zero the run's wire totals)."""
         self._closed_conn_stats += (
             conn.frames_out, conn.raw_bytes_out, conn.wire_bytes_out,
-            conn.frames_in, conn.raw_bytes_in, conn.wire_bytes_in)
+            conn.frames_in, conn.raw_bytes_in, conn.wire_bytes_in,
+            conn.inband_bytes_out, conn.oob_bytes_out)
 
     def stats_tuple(self) -> np.ndarray:
-        """(frames_out, raw_out, wire_out, frames_in, raw_in, wire_in)
-        over every connection this link has had."""
+        """(frames_out, raw_out, wire_out, frames_in, raw_in, wire_in,
+        inband_out, oob_out) over every connection this link has had."""
         with self.lock:
             total = self._closed_conn_stats.copy()
             conn = self.conn
             if conn is not None:
                 total += (conn.frames_out, conn.raw_bytes_out,
                           conn.wire_bytes_out, conn.frames_in,
-                          conn.raw_bytes_in, conn.wire_bytes_in)
+                          conn.raw_bytes_in, conn.wire_bytes_in,
+                          conn.inband_bytes_out, conn.oob_bytes_out)
         return total
 
     # -- traffic --------------------------------------------------------------
@@ -727,7 +916,7 @@ class SocketTransport(WorkerTransport):
                                        cfg.reconnect_backoff)
         self.reconnect_backoff_cap = _knob(reconnect_backoff_cap,
                                            cfg.reconnect_backoff_cap)
-        self._retired_link_stats = np.zeros(6, dtype=np.int64)
+        self._retired_link_stats = np.zeros(8, dtype=np.int64)
         self._session = uuid.uuid4().hex
         self._watermark = -1          # highest purged dispatch seq
         self._busy = np.zeros(cfg.num_workers)
@@ -919,12 +1108,21 @@ class SocketTransport(WorkerTransport):
         total = self._retired_link_stats.copy()
         for link in self.links:
             total += link.stats_tuple()
-        frames_out, raw_out, bytes_out, frames_in, raw_in, wire_in = (
-            int(x) for x in total)
+        (frames_out, raw_out, bytes_out, frames_in, raw_in, wire_in,
+         inband_out, oob_out) = (int(x) for x in total)
+        protos = {link.conn.proto for link in self.links
+                  if link.conn is not None}
         return {
+            "transport": "socket",
             "frames_sent": frames_out,
             "dispatch_raw_bytes": raw_out,
             "dispatch_wire_bytes": bytes_out,
+            # the zero-copy ledger: dispatch_copied_bytes crossed the
+            # pickler (a serialization copy), dispatch_oob_bytes were
+            # LRF2 out-of-band buffers shipped straight from the arrays
+            "dispatch_copied_bytes": inband_out,
+            "dispatch_oob_bytes": oob_out,
+            "frame_proto": max(protos) if protos else 1,
             "frames_received": frames_in,
             "result_raw_bytes": raw_in,
             "result_wire_bytes": wire_in,

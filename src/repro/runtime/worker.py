@@ -77,8 +77,15 @@ WAIT_SLICE = 0.1
 
 # -- compute kernels ----------------------------------------------------------
 
-def _host_compute(x: np.ndarray, y: np.ndarray) -> np.ndarray:
-    return x.T @ y
+def _host_compute(x: np.ndarray, y: np.ndarray,
+                  out: Optional[np.ndarray] = None) -> np.ndarray:
+    # ``out`` lets a transport provide the destination buffer — the
+    # process backend's shared-memory arena path computes each product
+    # straight into its result slot, so the value never exists anywhere
+    # else.  Same BLAS kernel either way: results are bit-identical.
+    if out is None:
+        return x.T @ y
+    return np.matmul(x.T, y, out=out)
 
 
 def _jax_compute(device) -> Callable[[np.ndarray, np.ndarray], np.ndarray]:

@@ -86,5 +86,8 @@ def test_paper_map_covers_the_load_bearing_surface():
             "repro.runtime.gateway.ServingGateway",
             "repro.runtime.gateway.AdmissionController",
             "repro.runtime.master.Master.serve_queue",
+            "repro.runtime.transport.shm.BlockArena",
+            "repro.runtime.tasks.ArenaBatchRef",
+            "repro.runtime.transport.socket_host.MAGIC2",
     ):
         assert required in text, f"paper-map.md no longer maps {required}"

@@ -35,6 +35,7 @@ from repro.core import simulator
 from repro.runtime import (BACKENDS, FusionNode, RoundContext, RuntimeConfig,
                            TaskResult, TransportDeadError, WireBatch,
                            make_transport, run_jobs)
+from repro.runtime.transport import shm as shm_mod
 from repro.runtime.transport.socket_host import LocalCluster
 
 MU3 = (400.0, 650.0, 380.0)
@@ -42,6 +43,15 @@ MU3 = (400.0, 650.0, 380.0)
 #: SIGKILL is the ISSUE's "n - k workers" budget and two drop below k.
 MU5 = (400.0, 650.0, 380.0, 420.0, 390.0)
 BACKENDS_FULL = ("thread", "process", "socket")
+#: wire-path rows: ``shm`` is the process backend with the shared-memory
+#: arena forced on (``process`` rows pin it off so both wire paths stay
+#: covered); it is a *config* of the process transport, not a registry
+#: entry, so :func:`bcfg` translates it.
+BACKENDS_WIRE = ("thread", "process", "shm", "socket")
+
+
+def _real_backend(backend: str) -> str:
+    return "process" if backend == "shm" else backend
 
 
 @pytest.fixture(scope="session")
@@ -58,7 +68,12 @@ def bcfg(request):
 
     def make(backend, **kw):
         kw.setdefault("mu", MU3)
-        if backend == "socket":
+        if backend == "shm":
+            backend = "process"
+            kw.setdefault("shm", "on")
+        elif backend == "process":
+            kw.setdefault("shm", "off")
+        elif backend == "socket":
             kw.setdefault(
                 "hosts", request.getfixturevalue("socket_cluster").hosts)
         return RuntimeConfig(backend=backend, **kw)
@@ -213,7 +228,7 @@ class TestWireForms:
         np.testing.assert_array_equal(back.value, r.value)
 
 
-@pytest.mark.parametrize("backend", BACKENDS_FULL)
+@pytest.mark.parametrize("backend", BACKENDS_WIRE)
 class TestTransportContract:
     """Direct transport-level checks, no master loop involved."""
 
@@ -334,7 +349,7 @@ class TestTransportContract:
         assert not _runtime_worker_processes()
 
 
-@pytest.mark.parametrize("backend", BACKENDS_FULL)
+@pytest.mark.parametrize("backend", BACKENDS_WIRE)
 class TestEndToEndConformance:
     """The load-bearing runtime tests, identical over every backend."""
 
@@ -342,7 +357,11 @@ class TestEndToEndConformance:
         cfg = bcfg(backend, arrival_rate=100.0, complexity=0.2,
                    straggler="none", seed=0)
         res, futures = run_jobs(cfg, num_jobs=6, K=64, M=8, N=8, verify=True)
-        assert res.backend == backend
+        assert res.backend == _real_backend(backend)
+        if backend == "shm":
+            # the zero-copy path actually carried the run
+            assert res.transport_stats["shm_active"]
+            assert res.transport_stats["arena_rounds"] > 0
         assert res.success.all()
         assert (res.released == cfg.num_layers - 1).all()
         assert not res.terminated.any()
@@ -575,6 +594,30 @@ class TestDegradeConformance:
         assert not res.degraded.any()
         assert (res.released == cfg.num_layers - 1).all()
         assert np.nanmax(res.verify_errors) < 1e-9
+        assert not _runtime_worker_processes()
+
+    def test_process_shm_sigkill_completes_and_leaks_no_segments(self):
+        """The zero-copy wire path under the same headline kill: a worker
+        SIGKILLed while it holds live arena slots must not cost
+        correctness (degrade absorbs the loss, decode verifies) nor leak
+        a single ``/dev/shm`` segment — the master owns and unlinks every
+        arena, dead attacher or not."""
+        cfg = self._degrade_cfg("process", shm="on")
+        prefix = f"lra-{os.getpid():x}-"
+
+        def inject():
+            procs = _await_worker_processes(len(MU5))
+            time.sleep(0.5)
+            os.kill(procs[1].pid, signal.SIGKILL)
+
+        res, _ = _run_with_faults(cfg, 20, inject)
+        assert res.workers_lost == 1
+        assert res.success.all()
+        assert not res.degraded.any()
+        assert np.nanmax(res.verify_errors) < 1e-9
+        assert res.transport_stats["shm_active"]
+        assert res.transport_stats["arena_rounds"] > 0
+        assert shm_mod.leaked_segments(prefix) == []
         assert not _runtime_worker_processes()
 
     def test_process_res0_deadline_success_survives_kill(self):

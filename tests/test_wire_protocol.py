@@ -6,6 +6,11 @@ header, decompressed-size mismatch); the property-based block (hypothesis,
 via the optional shim) round-trips arbitrary ``WireBatch``/``TaskResult``
 shapes and dtypes with and without compression — the frames that actually
 cross the network in a run.
+
+LRF2 (``proto=2``) gets its own block: raw ndarray buffers ride
+out-of-band next to a tiny pickled meta, so the cases additionally pin
+down bit-identity, the in-band/out-of-band byte split, and that both
+frame generations parse off one stream (the mixed-version window).
 """
 
 import struct
@@ -16,9 +21,11 @@ import pytest
 from _hypothesis_compat import HAVE_HYPOTHESIS, hypothesis, st
 from repro.runtime.tasks import TaskResult, WireBatch
 from repro.runtime.transport.socket_host import (CODECS, COMPRESS_MIN_BYTES,
-                                                 HEADER_SIZE, MAGIC,
-                                                 FrameError, decode_frame,
-                                                 encode_frame, have_lz4)
+                                                 HEADER_SIZE, MAGIC, MAGIC2,
+                                                 FrameError,
+                                                 _encode_frame_info,
+                                                 decode_frame, encode_frame,
+                                                 have_lz4)
 
 COMPRESS_MODES = ["none", "auto", "zlib"] + (["lz4"] if have_lz4() else [])
 
@@ -177,6 +184,101 @@ class TestFrameRejection:
                 decode_frame(junk)
 
 
+class TestFrameV2:
+    """LRF2: pickle-free ndarray payloads (protocol-5 meta + raw buffers)."""
+
+    @pytest.mark.parametrize("compress", COMPRESS_MODES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_wire_batch_round_trips(self, compress, dtype):
+        rng = np.random.default_rng(0)
+        batch = _batch(rng, (6, 32, 8), dtype)
+        frame = encode_frame(("round", batch), compress=compress, proto=2)
+        assert frame[:4] == MAGIC2
+        (kind, back), consumed = decode_frame(frame)
+        assert kind == "round" and consumed == len(frame)
+        _assert_batches_equal(batch, back)
+
+    def test_result_decodes_bit_identical(self):
+        value = np.random.default_rng(1).normal(size=(8, 8))
+        r = TaskResult(job_id=1, round_idx=2, task_id=3, worker_id=4,
+                       value=value, finished_at=5.5)
+        frame = encode_frame(("result", r.to_wire(), 0.5), compress="none",
+                             proto=2)
+        (kind, wire, busy), _ = decode_frame(frame)
+        back = TaskResult.from_wire(wire)
+        assert kind == "result" and busy == 0.5
+        assert np.array_equal(back.value.view(np.uint64),
+                              value.view(np.uint64))
+
+    def test_bulk_bytes_ride_out_of_band(self):
+        """The point of the format: ndarray payload bytes are handed to
+        the socket as raw buffers, never copied through the pickler —
+        only the small metadata stays in-band."""
+        batch = _batch(np.random.default_rng(2), (4, 64, 64), np.float64)
+        parts, raw_len, inband, oob = _encode_frame_info(
+            ("round", batch), compress="none", proto=2)
+        bulk = batch.x.nbytes + batch.y.nbytes + batch.delays.nbytes
+        assert oob == bulk
+        assert inband < 2048                 # meta only
+        assert raw_len == inband + oob
+        (_, back), _ = decode_frame(b"".join(parts))
+        _assert_batches_equal(batch, back)
+
+    def test_control_messages_have_no_buffers(self):
+        frame = encode_frame(("purge", 17), proto=2)
+        assert frame[:4] == MAGIC2
+        obj, used = decode_frame(frame)
+        assert obj == ("purge", 17) and used == len(frame)
+        _, _, inband, oob = _encode_frame_info(("purge", 17), proto=2)
+        assert oob == 0 and inband > 0
+
+    def test_both_generations_parse_off_one_stream(self):
+        """Self-delimiting across versions: during the negotiation window
+        a receiver may see LRF1 and LRF2 frames back to back."""
+        f1 = encode_frame(("ping",), proto=1)
+        f2 = encode_frame(("round", np.ones((2, 4, 4))), proto=2)
+        buf = f1 + f2
+        obj1, used1 = decode_frame(buf)
+        (kind, back), used2 = decode_frame(buf[used1:])
+        assert obj1 == ("ping",) and kind == "round"
+        np.testing.assert_array_equal(back, np.ones((2, 4, 4)))
+        assert used1 + used2 == len(buf)
+
+    def test_v2_compression_round_trips_compressible_payload(self):
+        big = np.zeros((4, 64, 64))
+        frame = encode_frame(("round", big), compress="auto", proto=2)
+        wire_len = struct.unpack("!I", frame[12:16])[0]
+        raw_len = struct.unpack("!I", frame[8:12])[0]
+        assert wire_len < raw_len            # actually compressed
+        (_, back), _ = decode_frame(frame)
+        np.testing.assert_array_equal(back, big)
+
+    def test_truncated_v2_payload_rejected(self):
+        frame = encode_frame(("round", np.ones((4, 8, 8))), proto=2)
+        with pytest.raises(FrameError, match="truncated"):
+            decode_frame(frame[:HEADER_SIZE + 10])
+
+    def test_corrupt_v2_length_table_rejected(self):
+        """A meta length pointing past the payload must surface as
+        FrameError, not an index crash in the receiver thread."""
+        frame = bytearray(encode_frame(("round", np.ones((4, 8, 8))),
+                                       compress="none", proto=2))
+        meta_len, nbuf = struct.unpack_from("!IH", frame, HEADER_SIZE)
+        struct.pack_into("!IH", frame, HEADER_SIZE, meta_len + 10_000, nbuf)
+        with pytest.raises(FrameError):
+            decode_frame(bytes(frame))
+
+    def test_wrong_v2_version_rejected(self):
+        frame = bytearray(encode_frame(("ping",), proto=2))
+        frame[4] = 99
+        with pytest.raises(FrameError, match="version"):
+            decode_frame(bytes(frame))
+
+    def test_unknown_proto_rejected_at_encode(self):
+        with pytest.raises(ValueError, match="proto"):
+            encode_frame(("ping",), proto=3)
+
+
 # -- property-based block (skipped cleanly without hypothesis) ---------------
 
 if HAVE_HYPOTHESIS:
@@ -191,13 +293,14 @@ class TestFrameProperties:
         n=st.integers(1, 8), k=st.integers(1, 48), m=st.integers(1, 24),
         dtype=st.sampled_from(DTYPES),
         compress=st.sampled_from(COMPRESS_MODES),
+        proto=st.sampled_from((1, 2)),
         seed=st.integers(0, 2**32 - 1))
     def test_wire_batch_any_geometry_round_trips(self, n, k, m, dtype,
-                                                 compress, seed):
+                                                 compress, proto, seed):
         rng = np.random.default_rng(seed)
         batch = _batch(rng, (n, k, m), dtype)
         (kind, back), consumed = decode_frame(
-            encode_frame(("round", batch), compress=compress))
+            encode_frame(("round", batch), compress=compress, proto=proto))
         assert kind == "round"
         _assert_batches_equal(batch, back)
 
@@ -240,4 +343,4 @@ class TestFrameProperties:
             _, consumed = decode_frame(data)
         except FrameError:
             return
-        assert data[:4] == MAGIC and consumed <= len(data)
+        assert data[:4] in (MAGIC, MAGIC2) and consumed <= len(data)
