@@ -139,6 +139,50 @@ def check_process_roundtrip(new_path: str, baseline_path: str,
     return failures
 
 
+def check_hierarchical_salvage(new_path: str) -> list[str]:
+    """Gate the hierarchical family's salvage claim.
+
+    The bench's ``hierarchical`` section runs the sub-task-granular
+    family against the purge-everything polynomial baseline at equal ω.
+    Under the ``stall`` regime the salvage ledger must be nonzero —
+    deep-level sub-task results banked while the master waited on the
+    frontier.  A zero ledger means grouped dispatch silently degraded to
+    task-granular behavior (frontier never trailed the arrivals), which
+    is a correctness-of-mechanism regression even when delays look fine.
+    Skips with a note when the artifact or section is absent.
+    """
+    new_file = pathlib.Path(new_path)
+    if not new_file.exists():
+        print(f"[check] hierarchical: {new_path} absent (transport bench "
+              f"not run), skipping")
+        return []
+    rows = json.loads(new_file.read_text()).get("hierarchical")
+    if not rows:
+        print("[check] hierarchical: section absent (pre-hierarchical "
+              "artifact), skipping")
+        return []
+    failures = []
+    for regime in ("stall", "burst"):
+        row = next((r for r in rows
+                    if r.get("regime") == regime
+                    and r.get("code_family") == "hierarchical"), None)
+        if row is None:
+            failures.append(f"hierarchical {regime} row missing from "
+                            f"bench artifact")
+            continue
+        ws = row.get("transport_stats") or {}
+        salvaged = int(ws.get("salvaged_subtasks", 0))
+        accepted = int(ws.get("subtask_results", 0))
+        if regime == "stall" and salvaged <= 0:
+            failures.append(
+                f"hierarchical {regime}: salvaged_subtasks={salvaged} "
+                f"(must be > 0 — grouped dispatch banked nothing)")
+        else:
+            print(f"[check] hierarchical {regime}: salvaged "
+                  f"{salvaged}/{accepted} accepted sub-task results  OK")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--new", default="BENCH_runtime.json",
@@ -162,6 +206,7 @@ def main(argv=None) -> int:
     failures += check_process_roundtrip(args.transport_new,
                                         args.transport_baseline,
                                         args.max_regress)
+    failures += check_hierarchical_salvage(args.transport_new)
     if failures:
         print("[check] FAIL:\n  " + "\n  ".join(failures), file=sys.stderr)
         return 1

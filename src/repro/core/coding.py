@@ -47,8 +47,8 @@ try:
 except ImportError:  # pragma: no cover - scipy is a baked-in dep
     _HAVE_SCIPY = False
 
-__all__ = ["PolynomialCode", "MDSCode", "DecodePlan", "modmatmul",
-           "MERSENNE_P"]
+__all__ = ["PolynomialCode", "HierarchicalCode", "MDSCode", "DecodePlan",
+           "modmatmul", "MERSENNE_P"]
 
 MERSENNE_P = (1 << 31) - 1
 
@@ -484,6 +484,132 @@ def _lift_gfp(x_obj: np.ndarray, p: int) -> np.ndarray:
     flat = np.array([int(v) for v in x_obj.reshape(-1)], dtype=np.int64)
     flat = np.where(flat > p // 2, flat - p, flat)
     return flat.reshape(x_obj.shape)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical code family (Ferdinand & Draper; Park et al.)
+# ---------------------------------------------------------------------------
+
+def _hier_level_lengths(k: int, levels: int, budget: int) -> tuple[int, ...]:
+    """MSB-heavy per-level codeword lengths summing exactly to ``budget``.
+
+    Every level keeps at least the recovery threshold ``k``; the surplus
+    ``budget - levels*k`` is split with linearly decaying weights
+    ``levels, levels-1, ..., 1`` so the level carrying the most
+    significant digit planes gets the most redundancy — that is the
+    resolution the paper's deadline rule releases first, so it is the
+    one that must survive stragglers.  Rounding leftovers also go
+    MSB-first, keeping the allocation deterministic.
+    """
+    if budget < levels * k:
+        raise ValueError(
+            f"budget {budget} cannot give {levels} levels k={k} each")
+    extra = budget - levels * k
+    weights = [levels - l for l in range(levels)]
+    total_w = sum(weights)
+    alloc = [extra * w // total_w for w in weights]
+    for l in range(extra - sum(alloc)):      # leftovers, MSB-first
+        alloc[l] += 1
+    return tuple(k + a for a in alloc)
+
+
+def _exact_length_code(n1: int, n2: int, num_tasks: int, mode: str,
+                       p: int) -> PolynomialCode:
+    """A PolynomialCode with *exactly* ``num_tasks`` codeword symbols.
+
+    ``omega = (T - 0.5) / k`` makes ``ceil(k * omega) == T`` for any
+    ``T > k`` without floating-point edge cases; ``T == k`` is the
+    rate-1 code.  Frozen dataclass, so instances are cheap and the
+    plan/basis caches key by geometry anyway.
+    """
+    k = n1 * n2
+    if num_tasks < k:
+        raise ValueError(f"codeword length {num_tasks} below k={k}")
+    omega = 1.0 if num_tasks == k else (num_tasks - 0.5) / k
+    code = PolynomialCode(n1=n1, n2=n2, omega=omega, mode=mode, p=p)
+    assert code.num_tasks == num_tasks
+    return code
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalCode:
+    """Hierarchical coded matmul: L stacked per-level MDS codes.
+
+    Following Ferdinand & Draper's hierarchical coding, each worker's
+    assignment is split into ``levels`` sub-tasks, each an independent
+    polynomial codeword over the same ``k = n1 * n2`` recovery threshold
+    but its *own* MDS rate: level l has ``level_lengths[l]`` coded
+    symbols, MSB-heavy at equal aggregate budget
+    ``sum(level_lengths) == levels * ceil(k * omega)``.  A straggler that
+    finishes only its first sub-tasks has still contributed decodable
+    symbols to the earliest levels — partial progress counts instead of
+    being purged wholesale.
+
+    The runtime aligns level order with the digit-plane layering's
+    MSB-first round order (``layering.all_minijobs_msb_first``): level l
+    of a dispatch group *is* plane-pair round ``g0 + l``, so every
+    completed sub-task advances some resolution of the layered output.
+
+    Per-level encode/decode delegate to ordinary
+    :class:`PolynomialCode` instances, so the per-geometry
+    ``DecodePlan`` LRU (and its warm any-k operator caches) is shared
+    with the flat family — two levels with equal length use one plan.
+    """
+
+    n1: int
+    n2: int
+    levels: int
+    omega: float = 1.0
+    mode: str = "float"
+    p: int = MERSENNE_P
+
+    def __post_init__(self):
+        if self.n1 < 1 or self.n2 < 1:
+            raise ValueError("n1, n2 must be >= 1")
+        if self.levels < 1:
+            raise ValueError(f"levels must be >= 1, got {self.levels}")
+        if self.omega < 1.0:
+            raise ValueError(f"redundancy ratio must be >= 1, got {self.omega}")
+        if self.mode not in ("float", "gfp"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+
+    @property
+    def k(self) -> int:
+        return self.n1 * self.n2
+
+    @property
+    def base_tasks(self) -> int:
+        """Codeword length the flat polynomial family would use."""
+        return max(self.k, math.ceil(self.k * self.omega))
+
+    @property
+    def level_lengths(self) -> tuple[int, ...]:
+        """Per-level codeword lengths; MSB-heavy, equal aggregate budget."""
+        return _hier_level_lengths(self.k, self.levels,
+                                   self.levels * self.base_tasks)
+
+    @property
+    def num_tasks(self) -> int:
+        """Total coded sub-tasks across all levels (== levels * base_tasks)."""
+        return sum(self.level_lengths)
+
+    def level_code(self, level: int) -> PolynomialCode:
+        """The level's own polynomial code, exactly ``level_lengths[level]``
+        symbols long."""
+        return _exact_length_code(self.n1, self.n2,
+                                  self.level_lengths[level], self.mode,
+                                  self.p)
+
+    # -- per-level encode/decode (thin delegation; the runtime drives the
+    #    level codes directly when it wants side-split encodes) ------------
+    def encode_level(self, level: int, a, b):
+        return self.level_code(level).encode(a, b)
+
+    def decode_level(self, level: int, task_ids: Sequence[int], results):
+        return self.level_code(level).decode(task_ids, results)
+
+    def plan(self, level: int) -> DecodePlan:
+        return self.level_code(level).plan()
 
 
 # ---------------------------------------------------------------------------

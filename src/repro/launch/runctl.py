@@ -42,8 +42,8 @@ import sys
 import numpy as np
 
 from repro.core import simulator
-from repro.runtime import (BACKEND_NAMES, FAULT_POLICIES, FRAME_PROTOS,
-                           POLICIES, SHM_MODES,
+from repro.runtime import (BACKEND_NAMES, CODE_FAMILIES, FAULT_POLICIES,
+                           FRAME_PROTOS, POLICIES, SHM_MODES,
                            RuntimeConfig, delay_table,
                            format_controller_trace, format_delay_table,
                            format_stage_table, run_jobs)
@@ -85,6 +85,7 @@ def build_config(args: argparse.Namespace,
                else tuple(h for h in args.hosts.split(",") if h)),
         compress=args.compress, shm=args.shm,
         frame_proto=args.frame_proto,
+        code_family=args.code_family, levels=args.levels,
         trace=_wants_trace(args), seed=args.seed,
         fault_policy=args.fault_policy,
         heartbeat_interval=args.heartbeat_interval,
@@ -104,7 +105,8 @@ def summarize(cfg: RuntimeConfig, result) -> dict:
             "d": cfg.d, "gamma": cfg.gamma, "complexity": cfg.complexity,
             "deadline": cfg.deadline, "straggler": cfg.straggler,
             "stall_workers": list(cfg.stall_workers), "seed": cfg.seed,
-            "backend": cfg.backend,
+            "backend": cfg.backend, "code_family": cfg.code_family,
+            "levels": cfg.levels,
         },
         "backend": result.backend,
         "num_jobs": int(result.num_jobs),
@@ -222,6 +224,18 @@ def main(argv=None) -> int:
                          "possible), 1 = force LRF1 (one pickle per "
                          "frame, mixed-version escape hatch), 2 = "
                          "require LRF2 (pickle-free ndarray frames)")
+    ap.add_argument("--code-family", choices=CODE_FAMILIES,
+                    default="polynomial", dest="code_family",
+                    help="coded-task family: polynomial = one coded round "
+                         "per mini-job (the paper's scheme), hierarchical "
+                         "= grouped level rounds with per-level MDS rates "
+                         "and sub-task-granular dispatch/fusion (straggler "
+                         "work on deeper levels is salvaged, not purged)")
+    ap.add_argument("--levels", type=int, default=1,
+                    help="hierarchical group size: consecutive MSB-first "
+                         "rounds dispatched as one group (>= 2 with "
+                         "--code-family hierarchical; must stay 1 for "
+                         "polynomial)")
     ap.add_argument("--fault-policy", choices=FAULT_POLICIES,
                     default="fail-fast",
                     help="worker-loss handling: fail-fast raises on any "

@@ -30,7 +30,8 @@ from repro.runtime.master import JobQueue, Master, make_jobs, run_jobs
 from repro.runtime.metrics import (STAGES, RuntimeResult, delay_table,
                                    format_controller_trace,
                                    format_delay_table, format_stage_table)
-from repro.runtime.tasks import (BACKEND_NAMES, FAULT_POLICIES,
+from repro.runtime.tasks import (BACKEND_NAMES, CODE_FAMILIES,
+                                 FAULT_POLICIES,
                                  FRAME_PROTOS, SHM_MODES, JobSpec,
                                  RoundBatch, RoundContext, RuntimeConfig,
                                  TaskResult, WireBatch)
@@ -52,7 +53,7 @@ from repro.runtime.worker import (BatchRunner, StragglerModel, Worker,
 __all__ = [
     "RuntimeConfig", "JobSpec", "RoundContext", "RoundBatch", "TaskResult",
     "WireBatch", "BACKEND_NAMES", "FAULT_POLICIES", "SHM_MODES",
-    "FRAME_PROTOS",
+    "FRAME_PROTOS", "CODE_FAMILIES",
     "FaultSupervisor", "TransportDeadError", "FusionStateError",
     "Worker", "WorkerPool", "StragglerModel", "BatchRunner", "make_compute",
     "WorkerTransport", "BACKENDS", "make_transport",

@@ -98,19 +98,72 @@ class RoundFusion:
 
 
 class FusionNode:
-    """Routes worker results to the current round; drops stale ones."""
+    """Routes worker results to the live round(s); drops stale ones.
+
+    Two routing regimes share one sink:
+
+    * **Task-granular** (polynomial family): :meth:`begin_round` installs
+      a single current round; anything else is stale.
+    * **Sub-task-granular** (hierarchical family): :meth:`begin_group`
+      installs a whole group of level rounds at once, keyed by
+      ``(job_id, round_idx)``.  A result for *any* open level is
+      accepted — including levels beyond the one the master is currently
+      waiting on (:meth:`set_frontier`) — so straggler work on deeper
+      levels is banked, never discarded.  Those banked acceptances are
+      the **salvage ledger**: ``subtask_results`` counts every accepted
+      grouped result, ``salvaged_subtasks`` the subset that landed ahead
+      of the master's wait frontier.
+
+    Staleness accounting is exact in both regimes: a result is counted
+    stale at most once, at the single point it is rejected — whether it
+    is late for a purged level, a duplicate ``task_id`` (a purged
+    worker's last-gasp sub-task racing a re-dispatch), or arrives after
+    :meth:`end_group` closed its group.
+    """
 
     def __init__(self, tracer: Optional[telemetry.Tracer] = None):
         self._lock = threading.Lock()
         self._current: Optional[RoundFusion] = None
+        self._group: dict[tuple[int, int], RoundFusion] = {}
+        self._frontier = -1
         self._tracer = tracer
         self.stale_results = 0
+        self.subtask_results = 0
+        self.salvaged_subtasks = 0
 
     def begin_round(self, ctx: RoundContext, k: int) -> RoundFusion:
         rf = RoundFusion(ctx, k, self._tracer)
         with self._lock:
             self._current = rf
         return rf
+
+    def begin_group(self, ctxs: list[RoundContext],
+                    k: int) -> list[RoundFusion]:
+        """Open one fusion per level round of a hierarchical group.
+
+        All level rounds accept results concurrently until
+        :meth:`end_group`; the wait frontier starts below every round so
+        the first :meth:`set_frontier` defines it.
+        """
+        rfs = [RoundFusion(ctx, k, self._tracer) for ctx in ctxs]
+        with self._lock:
+            self._current = None
+            self._group = {(rf.ctx.job_id, rf.ctx.round_idx): rf
+                           for rf in rfs}
+            self._frontier = -1
+        return rfs
+
+    def set_frontier(self, round_idx: int) -> None:
+        """Declare the round the master is about to wait on: any accepted
+        result for a *deeper* round is salvaged straggler work."""
+        with self._lock:
+            self._frontier = round_idx
+
+    def end_group(self) -> None:
+        """Close the open group; late results for it become stale."""
+        with self._lock:
+            self._group = {}
+            self._frontier = -1
 
     def post(self, result: TaskResult) -> bool:
         """Route one result; returns True iff it was accepted.
@@ -126,7 +179,11 @@ class FusionNode:
         watermark passes it.
         """
         with self._lock:
-            rf = self._current
+            rf = self._group.get((result.job_id, result.round_idx))
+            grouped = rf is not None
+            if rf is None:
+                rf = self._current
+            frontier = self._frontier
         if (rf is None
                 or rf.ctx.job_id != result.job_id
                 or rf.ctx.round_idx != result.round_idx
@@ -139,6 +196,11 @@ class FusionNode:
                                   task=result.task_id,
                                   worker=result.worker_id)
             return False
+        if grouped:
+            with self._lock:
+                self.subtask_results += 1
+                if result.round_idx > frontier:
+                    self.salvaged_subtasks += 1
         return True
 
 

@@ -72,7 +72,7 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import layering
+from repro.core import coding, layering
 from repro.runtime import metrics, telemetry
 from repro.runtime.adaptive import OmegaController, RoundObservation
 from repro.runtime.faults import FaultSupervisor
@@ -267,6 +267,12 @@ class Master:
         self.tracer = telemetry.Tracer() if cfg.trace else None
         self.fusion = FusionNode(tracer=self.tracer)
         self.controller = OmegaController(cfg)
+        #: eq. (1) splits cached per ``(T, active)`` for the hierarchical
+        #: family: level lengths repeat every group, and the optimization
+        #: behind :meth:`RuntimeConfig.load_split` is ms-scale — paying it
+        #: per level would dwarf a whole round's fuse time.  (The flat
+        #: family's split is cached the same way, as ``controller.kappa``.)
+        self._hier_kappas: dict = {}
         #: Monotonic origin of the serve loop — valid once :attr:`started`
         #: is set.  Queue-mode producers stamp ``JobSpec.arrival`` /
         #: ``deadline_at`` as offsets from this instant.
@@ -313,6 +319,187 @@ class Master:
             job_id=-1,
             a=rng.integers(-lim, lim, size=(16, 2 * cfg.n1), dtype=np.int64),
             b=rng.integers(-lim, lim, size=(16, 2 * cfg.n2), dtype=np.int64))
+
+    # -- hierarchical (sub-task-granular) service ------------------------------
+    def _serve_hier_job(self, job, lr, prep, pool, sup, t_term, R_job,
+                        guaranteed, stage, global_round, prev_stale):
+        """Serve one job with the hierarchical code family.
+
+        Rounds are dispatched in *groups* of up to ``cfg.levels``
+        consecutive MSB-first mini-jobs, each level its own coded round
+        under one :class:`~repro.core.coding.HierarchicalCode` (per-level
+        MDS rates, MSB-heavy at the controller's current aggregate
+        budget).  Every worker receives its slices of the whole group in
+        one message and flows through the levels in order, so while the
+        master waits on the frontier level, results for deeper levels
+        bank in the fusion group — straggler work is never discarded,
+        only the *specific level* that fused is purged
+        (:meth:`WorkerTransport.purge_level`).  A deadline or fault that
+        cuts the job mid-group still ships every level that completed —
+        the §IV release happens at the best level-complete resolution.
+
+        Returns ``(term, faulted, rounds_timed, global_round,
+        prev_stale)`` so the caller's shared release tail and controller
+        bookkeeping continue unchanged.
+        """
+        cfg = self.cfg
+        ctrl = self.controller
+        tr = self.tracer
+        t0 = self.t0
+        qa, qb, scale, ca, cb = prep
+        order = layering.all_minijobs_msb_first(cfg.m)
+        cum = layering.cumulative_minijobs(cfg.m)
+        acc = np.zeros((qa.shape[1], qb.shape[1]), dtype=np.float64)
+        # per-side coded planes keyed by (T, plane): level lengths vary
+        # across the group (MSB-heavy), so each length caches separately
+        enc_a: dict[tuple[int, int], np.ndarray] = {}
+        enc_b: dict[tuple[int, int], np.ndarray] = {}
+        n_ret = len(ctrl.trace)
+        timed = 0
+        term = False
+        faulted = False
+        ridx0 = 0
+        while ridx0 < R_job and not term:
+            g_end = min(ridx0 + cfg.levels, R_job)
+            rounds = order[ridx0:g_end]
+            G = len(rounds)
+            if sup.check():
+                faulted = term = True
+                break
+            if (t_term is not None and ridx0 >= guaranteed
+                    and clock() >= t_term):
+                term = True      # don't dispatch a dead group
+                break
+            # the group's code picks up the controller's current geometry
+            # (ω retune / fleet refit): per-level lengths are re-derived
+            # from ctrl.omega and the split from ctrl.active every group
+            hc = coding.HierarchicalCode(n1=cfg.n1, n2=cfg.n2, levels=G,
+                                         omega=ctrl.omega, mode="float")
+            ts = clock()
+            ctxs: list[RoundContext] = []
+            Xs, Ys, kappas, codes = [], [], [], []
+            for lvl in range(G):
+                lcode = hc.level_code(lvl)
+                T = lcode.num_tasks
+                _, pi, pj = rounds[lvl]
+                Xa = enc_a.get((T, pi))
+                if Xa is None:
+                    Xa = enc_a[(T, pi)] = lcode.encode_a(
+                        np.asarray(ca[pi], np.float64))
+                Yb = enc_b.get((T, pj))
+                if Yb is None:
+                    Yb = enc_b[(T, pj)] = lcode.encode_b(
+                        np.asarray(cb[pj], np.float64))
+                ctxs.append(RoundContext(job.job_id, ridx0 + lvl))
+                Xs.append(Xa)
+                Ys.append(Yb)
+                kappa = self._hier_kappas.get((T, ctrl.active))
+                if kappa is None:
+                    kappa = self._hier_kappas[(T, ctrl.active)] = \
+                        cfg.load_split(total=T, active=ctrl.active)
+                kappas.append(kappa)
+                codes.append(lcode)
+            te = clock()
+            stage["encode"] += te - ts
+            if tr is not None:
+                tr.emit(telemetry.ENCODE, ts, te - ts, job=job.job_id,
+                        round=ridx0)
+            rfs = self.fusion.begin_group(ctxs, cfg.k)
+            ts = t_disp = clock()
+            pool.submit_group(ctxs, Xs, Ys, kappas)
+            stage["dispatch"] += clock() - ts
+            timed += G
+            # frontier walk: wait the levels out MSB-first; any result
+            # landing beyond the frontier banks as salvaged sub-task work
+            for lvl in range(G):
+                ridx = ridx0 + lvl
+                l, pi, pj = rounds[lvl]
+                rf = rfs[lvl]
+                ctx = ctxs[lvl]
+                self.fusion.set_frontier(ridx)
+                # frontier level is the one a worker death re-dispatches
+                sup.track_round(ctx, Xs[lvl], Ys[lvl], kappas[lvl], rf)
+                global_round += 1
+                ts = clock()
+                if t_term is None or ridx < guaranteed:
+                    while not (fused := rf.wait(sup.wait_slice)):
+                        if sup.check():
+                            faulted = True
+                            break
+                else:
+                    while True:
+                        remaining = t_term - clock()
+                        if remaining <= 0.0:
+                            fused = rf.wait(0.0)
+                            break
+                        if (fused := rf.wait(min(remaining,
+                                                 sup.wait_slice))):
+                            break
+                        if sup.check():
+                            faulted = True
+                            break
+                if faulted and rf.wait(0.0):
+                    # fused in the window between the wait slice timing
+                    # out and the supervisor giving up — never discarded
+                    fused, faulted = True, False
+                tw = clock()
+                stage["wait"] += tw - ts
+                if tr is not None:
+                    tr.emit(telemetry.ROUND, t_disp, tw - t_disp,
+                            job=job.job_id, round=ridx,
+                            label="fused" if fused else "purged")
+                if fused:
+                    # purge only THIS level's stragglers: deeper levels
+                    # of the group stay live on every worker
+                    pool.purge_level(ctx)
+                    td = clock()
+                    mini = rf.decode(codes[lvl])
+                    tp = clock()
+                    stage["decode"] += tp - td
+                    acc[...] += mini * float(1 << ((pi + pj) * cfg.d))
+                    published = ridx + 1 == cum[l]
+                    if published:
+                        lr.mark_resolution(l, acc * scale, rf.fused_at)
+                    stage["publish"] += clock() - tp
+                    if tr is not None:
+                        tr.emit(telemetry.DECODE, td, tp - td,
+                                job=job.job_id, round=ridx)
+                        if published:
+                            tr.emit(telemetry.RESOLUTION, rf.fused_at,
+                                    job=job.job_id, round=ridx,
+                                    value=float(l), label=f"res{l}")
+                tc = clock()
+                stale_now = self.fusion.stale_results
+                ctrl.observe(RoundObservation(
+                    round_idx=global_round - 1, job_id=job.job_id,
+                    wait=tw - ts, fused=bool(fused),
+                    stale=stale_now - prev_stale,
+                    deadline_margin=(None if t_term is None
+                                     else t_term - tw),
+                    rounds_left=R_job - ridx - 1,
+                    utilization=pool.busy_seconds
+                    / max(tw - t0, 1e-9)))
+                prev_stale = stale_now
+                if tr is not None and len(ctrl.trace) > n_ret:
+                    for rt in ctrl.trace[n_ret:]:
+                        tr.emit(telemetry.RETUNE, tc, job=job.job_id,
+                                round=ridx,
+                                value=float(rt["omega_new"]),
+                                label=rt["reason"])
+                    n_ret = len(ctrl.trace)
+                stage["control"] += clock() - tc
+                if not fused:
+                    term = True
+                    break
+            # group end: close the fusion group (late results become
+            # stale exactly once), cancel every level master-side, and
+            # push the wire watermark over the whole group's seq
+            self.fusion.end_group()
+            for ctx in ctxs:
+                ctx.purge()
+            pool.purge_round(ctxs[-1])
+            ridx0 = g_end
+        return term, faulted, timed, global_round, prev_stale
 
     # -- the event loop --------------------------------------------------------
     def run(self, jobs: Sequence[JobSpec]
@@ -461,211 +648,220 @@ class Master:
                 else:
                     guaranteed = 0
 
-                acc = np.zeros((qa.shape[1], qb.shape[1]), dtype=np.float64)
-                # per-side coded planes, filled on first use: the m**2
-                # rounds need only m A-side + m B-side encodes per job.
-                # Keyed by (T, plane): an ω retune mid-job switches the
-                # codeword length, and the old-T entries simply stop being
-                # hit (a switch costs at most m re-encodes per side).
-                enc_a: dict[tuple[int, int], np.ndarray] = {}
-                enc_b: dict[tuple[int, int], np.ndarray] = {}
+                if cfg.code_family == "hierarchical":
+                    # sub-task-granular path: grouped level rounds,
+                    # per-level any-k fusion, salvage ledger
+                    (term, faulted, timed, global_round,
+                     prev_stale) = self._serve_hier_job(
+                        job, lr, prep, pool, sup, t_term, R_job,
+                        guaranteed, stage, global_round, prev_stale)
+                    rounds_timed += timed
+                else:
+                    acc = np.zeros((qa.shape[1], qb.shape[1]), dtype=np.float64)
+                    # per-side coded planes, filled on first use: the m**2
+                    # rounds need only m A-side + m B-side encodes per job.
+                    # Keyed by (T, plane): an ω retune mid-job switches the
+                    # codeword length, and the old-T entries simply stop being
+                    # hit (a switch costs at most m re-encodes per side).
+                    enc_a: dict[tuple[int, int], np.ndarray] = {}
+                    enc_b: dict[tuple[int, int], np.ndarray] = {}
 
-                def encode_round(pi, pj, ridx=-1):
-                    """Encode one round under the controller's *current*
-                    geometry; the returned buffer carries its own
-                    ``(code, kappa)`` so a later retune never orphans it —
-                    an already-encoded round dispatches and decodes with
-                    the geometry it was built for."""
-                    ts = clock()
-                    rcode, rkappa = ctrl.code, ctrl.kappa
-                    T = rcode.num_tasks
-                    Xa = enc_a.get((T, pi))
-                    if Xa is None:
-                        Xa = enc_a[(T, pi)] = rcode.encode_a(
-                            np.asarray(ca[pi], np.float64))
-                    Yb = enc_b.get((T, pj))
-                    if Yb is None:
-                        Yb = enc_b[(T, pj)] = rcode.encode_b(
-                            np.asarray(cb[pj], np.float64))
-                    te = clock()
-                    stage["encode"] += te - ts
-                    if tr is not None:
-                        tr.emit(telemetry.ENCODE, ts, te - ts,
+                    def encode_round(pi, pj, ridx=-1):
+                        """Encode one round under the controller's *current*
+                        geometry; the returned buffer carries its own
+                        ``(code, kappa)`` so a later retune never orphans it —
+                        an already-encoded round dispatches and decodes with
+                        the geometry it was built for."""
+                        ts = clock()
+                        rcode, rkappa = ctrl.code, ctrl.kappa
+                        T = rcode.num_tasks
+                        Xa = enc_a.get((T, pi))
+                        if Xa is None:
+                            Xa = enc_a[(T, pi)] = rcode.encode_a(
+                                np.asarray(ca[pi], np.float64))
+                        Yb = enc_b.get((T, pj))
+                        if Yb is None:
+                            Yb = enc_b[(T, pj)] = rcode.encode_b(
+                                np.asarray(cb[pj], np.float64))
+                        te = clock()
+                        stage["encode"] += te - ts
+                        if tr is not None:
+                            tr.emit(telemetry.ENCODE, ts, te - ts,
+                                    job=job.job_id, round=ridx)
+                        return Xa, Yb, rcode, rkappa
+
+                    def finish_round_traced(rf, ridx, l, published, ts, tp):
+                        tr.emit(telemetry.DECODE, ts, tp - ts,
                                 job=job.job_id, round=ridx)
-                    return Xa, Yb, rcode, rkappa
+                        if published:
+                            tr.emit(telemetry.RESOLUTION, rf.fused_at,
+                                    job=job.job_id, round=ridx,
+                                    value=float(l), label=f"res{l}")
 
-                def finish_round_traced(rf, ridx, l, published, ts, tp):
-                    tr.emit(telemetry.DECODE, ts, tp - ts,
-                            job=job.job_id, round=ridx)
-                    if published:
-                        tr.emit(telemetry.RESOLUTION, rf.fused_at,
-                                job=job.job_id, round=ridx,
-                                value=float(l), label=f"res{l}")
+                    def finish_round(rf, ridx, l, pi, pj, rcode):
+                        """Decode a fused round, publish its layer if last.
 
-                def finish_round(rf, ridx, l, pi, pj, rcode):
-                    """Decode a fused round, publish its layer if last.
+                        Runs *behind* the next round's dispatch, so the layer
+                        is timestamped with the round's ``fused_at`` (its k-th
+                        task arrival) — the simulator's order-statistic
+                        semantics — not the later decode instant, keeping the
+                        measured delay free of next-round dispatch cost.
+                        """
+                        ts = clock()
+                        mini = rf.decode(rcode)
+                        tp = clock()
+                        stage["decode"] += tp - ts
+                        acc[...] += mini * float(1 << ((pi + pj) * cfg.d))
+                        published = ridx + 1 == cum[l]
+                        if published:   # layer l's last mini-job fused
+                            lr.mark_resolution(l, acc * scale, rf.fused_at)
+                        stage["publish"] += clock() - tp
+                        if tr is not None:
+                            finish_round_traced(rf, ridx, l, published, ts, tp)
 
-                    Runs *behind* the next round's dispatch, so the layer
-                    is timestamped with the round's ``fused_at`` (its k-th
-                    task arrival) — the simulator's order-statistic
-                    semantics — not the later decode instant, keeping the
-                    measured delay free of next-round dispatch cost.
-                    """
-                    ts = clock()
-                    mini = rf.decode(rcode)
-                    tp = clock()
-                    stage["decode"] += tp - ts
-                    acc[...] += mini * float(1 << ((pi + pj) * cfg.d))
-                    published = ridx + 1 == cum[l]
-                    if published:   # layer l's last mini-job fused
-                        lr.mark_resolution(l, acc * scale, rf.fused_at)
-                    stage["publish"] += clock() - tp
-                    if tr is not None:
-                        finish_round_traced(rf, ridx, l, published, ts, tp)
-
-                # prime the pipeline: round 0's codeword + injected delays
-                nxt = encode_round(order[0][1], order[0][2], 0)
-                nxt_delays = pool.sample_round_delays(nxt[3])
-                pending = None        # fused-but-undecoded previous round
-                term = False
-                faulted = False       # released by the fault supervisor
-                for ridx, (l, pi, pj) in enumerate(order[:R_job]):
-                    if (t_term is not None and ridx >= guaranteed
-                            and clock() >= t_term):
-                        term = True   # don't dispatch a dead round
-                        break
-                    # per-round liveness gate: when rounds fuse fast the
-                    # wait loops below may never time out, so a death
-                    # would otherwise go undetected while dispatches pile
-                    # buffers onto the corpse — fail-fast raises here,
-                    # degrade quarantines and re-splits kappa before the
-                    # next dispatch (True only on fleet collapse: there
-                    # is no in-flight round to give up on at this point)
-                    if sup.check():
-                        faulted = term = True
-                        break
-                    ctx = RoundContext(job.job_id, ridx)
-                    rf = self.fusion.begin_round(ctx, cfg.k)
-                    rcode = nxt[2]
-                    ts = t_disp = clock()
-                    pool.submit_round(ctx, nxt[0], nxt[1], nxt[3],
-                                      delays=nxt_delays)
-                    # hand the supervisor the round's buffers + split so a
-                    # worker death mid-round can re-dispatch the lost slice
-                    sup.track_round(ctx, nxt[0], nxt[1], nxt[3], rf)
-                    stage["dispatch"] += clock() - ts
-                    rounds_timed += 1
-                    global_round += 1
-                    nxt = None
-                    # -- overlapped with this round's worker compute: --
-                    # 1. decode the previous round, publish its layer
-                    if pending is not None:
+                    # prime the pipeline: round 0's codeword + injected delays
+                    nxt = encode_round(order[0][1], order[0][2], 0)
+                    nxt_delays = pool.sample_round_delays(nxt[3])
+                    pending = None        # fused-but-undecoded previous round
+                    term = False
+                    faulted = False       # released by the fault supervisor
+                    for ridx, (l, pi, pj) in enumerate(order[:R_job]):
+                        if (t_term is not None and ridx >= guaranteed
+                                and clock() >= t_term):
+                            term = True   # don't dispatch a dead round
+                            break
+                        # per-round liveness gate: when rounds fuse fast the
+                        # wait loops below may never time out, so a death
+                        # would otherwise go undetected while dispatches pile
+                        # buffers onto the corpse — fail-fast raises here,
+                        # degrade quarantines and re-splits kappa before the
+                        # next dispatch (True only on fleet collapse: there
+                        # is no in-flight round to give up on at this point)
+                        if sup.check():
+                            faulted = term = True
+                            break
+                        ctx = RoundContext(job.job_id, ridx)
+                        rf = self.fusion.begin_round(ctx, cfg.k)
+                        rcode = nxt[2]
+                        ts = t_disp = clock()
+                        pool.submit_round(ctx, nxt[0], nxt[1], nxt[3],
+                                          delays=nxt_delays)
+                        # hand the supervisor the round's buffers + split so a
+                        # worker death mid-round can re-dispatch the lost slice
+                        sup.track_round(ctx, nxt[0], nxt[1], nxt[3], rf)
+                        stage["dispatch"] += clock() - ts
+                        rounds_timed += 1
+                        global_round += 1
+                        nxt = None
+                        # -- overlapped with this round's worker compute: --
+                        # 1. decode the previous round, publish its layer
+                        if pending is not None:
+                            finish_round(*pending)
+                            pending = None
+                        # 2. encode round r+1 + presample its delays into the
+                        #    spare buffer, or (last round) digit-decompose the
+                        #    next *queued* job — continuous admission lands
+                        #    here: a job put() mid-service preps between
+                        #    rounds with no fleet restart
+                        if ridx + 1 < R_job:
+                            _, npi, npj = order[ridx + 1]
+                            nxt = encode_round(npi, npj, ridx + 1)
+                            nxt_delays = pool.sample_round_delays(nxt[3])
+                        else:
+                            nj = source.peek_ready()
+                            if nj is not None and nj.job_id not in prepared:
+                                ts = clock()
+                                prepared[nj.job_id] = self._prepare(nj)
+                                tp = clock()
+                                stage["prep"] += tp - ts
+                                if tr is not None:
+                                    tr.emit(telemetry.PREP, ts, tp - ts,
+                                            job=nj.job_id)
+                        # ---------------------------------------------------
+                        ts = clock()
+                        if t_term is None or ridx < guaranteed:
+                            # unbounded wait (no deadline, or a guaranteed
+                            # minimum-resolution round the deadline may not
+                            # cut): slice it so a worker that died (OOM-kill,
+                            # crashed child, dead remote host) is handled
+                            # promptly — fail-fast raises out of sup.check();
+                            # degrade quarantines/re-dispatches, returning
+                            # True only when the round is beyond saving —
+                            # instead of blocking the run forever on a round
+                            # that can no longer reach k results
+                            while not (fused := rf.wait(sup.wait_slice)):
+                                if sup.check():
+                                    faulted = True
+                                    break
+                        else:
+                            # bounded wait: still slice it — a multi-second
+                            # §IV deadline must not delay dead-host detection
+                            # (socket heartbeats, process joins) to the
+                            # termination instant
+                            while True:
+                                remaining = t_term - clock()
+                                if remaining <= 0.0:
+                                    fused = rf.wait(0.0)
+                                    break
+                                if (fused := rf.wait(min(remaining,
+                                                         sup.wait_slice))):
+                                    break
+                                if sup.check():
+                                    faulted = True
+                                    break
+                        if faulted and rf.wait(0.0):
+                            # the round fused in the window between the wait
+                            # timing out and the supervisor giving up on it —
+                            # a completed round is never thrown away
+                            fused, faulted = True, False
+                        tw = clock()
+                        stage["wait"] += tw - ts
+                        if tr is not None:
+                            tr.emit(telemetry.ROUND, t_disp, tw - t_disp,
+                                    job=job.job_id, round=ridx,
+                                    label="fused" if fused else "purged")
+                        # reclaim the round's stragglers.  View-lifetime
+                        # invariant for zero-copy transports: this round's
+                        # accepted results are NOT yet decoded (decode rides
+                        # one iteration behind, see ``pending``), so its
+                        # purge must not recycle their result slots — only
+                        # strictly older rounds', which this same loop
+                        # already decoded (finish_round(r-1) above precedes
+                        # purge(r) on this thread, hence precedes purge(r+1)
+                        # a fortiori).  Dispatch-slot reuse is safe
+                        # immediately: a straggler still reading a recycled
+                        # block can only produce a result fusion rejects
+                        # without dereferencing.
+                        pool.purge_round(ctx)
+                        # feed the controller this round's signals; a retune
+                        # takes effect from the NEXT encode (the buffered
+                        # round keeps the geometry it was encoded with)
+                        tc = clock()       # purge wake-ups stay out of the
+                        stale_now = self.fusion.stale_results   # control stage
+                        ctrl.observe(RoundObservation(
+                            round_idx=global_round - 1, job_id=job.job_id,
+                            wait=tw - ts, fused=bool(fused),
+                            stale=stale_now - prev_stale,
+                            deadline_margin=(None if t_term is None
+                                             else t_term - tw),
+                            rounds_left=R_job - ridx - 1,
+                            utilization=pool.busy_seconds
+                            / max(tw - t0, 1e-9)))
+                        prev_stale = stale_now
+                        if tr is not None and len(ctrl.trace) > n_retunes:
+                            for rt in ctrl.trace[n_retunes:]:
+                                tr.emit(telemetry.RETUNE, tc, job=job.job_id,
+                                        round=ridx,
+                                        value=float(rt["omega_new"]),
+                                        label=rt["reason"])
+                            n_retunes = len(ctrl.trace)
+                        stage["control"] += clock() - tc
+                        if not fused:
+                            term = True
+                            break
+                        pending = (rf, ridx, l, pi, pj, rcode)
+                    if pending is not None:   # drain the decode-behind stage
                         finish_round(*pending)
-                        pending = None
-                    # 2. encode round r+1 + presample its delays into the
-                    #    spare buffer, or (last round) digit-decompose the
-                    #    next *queued* job — continuous admission lands
-                    #    here: a job put() mid-service preps between
-                    #    rounds with no fleet restart
-                    if ridx + 1 < R_job:
-                        _, npi, npj = order[ridx + 1]
-                        nxt = encode_round(npi, npj, ridx + 1)
-                        nxt_delays = pool.sample_round_delays(nxt[3])
-                    else:
-                        nj = source.peek_ready()
-                        if nj is not None and nj.job_id not in prepared:
-                            ts = clock()
-                            prepared[nj.job_id] = self._prepare(nj)
-                            tp = clock()
-                            stage["prep"] += tp - ts
-                            if tr is not None:
-                                tr.emit(telemetry.PREP, ts, tp - ts,
-                                        job=nj.job_id)
-                    # ---------------------------------------------------
-                    ts = clock()
-                    if t_term is None or ridx < guaranteed:
-                        # unbounded wait (no deadline, or a guaranteed
-                        # minimum-resolution round the deadline may not
-                        # cut): slice it so a worker that died (OOM-kill,
-                        # crashed child, dead remote host) is handled
-                        # promptly — fail-fast raises out of sup.check();
-                        # degrade quarantines/re-dispatches, returning
-                        # True only when the round is beyond saving —
-                        # instead of blocking the run forever on a round
-                        # that can no longer reach k results
-                        while not (fused := rf.wait(sup.wait_slice)):
-                            if sup.check():
-                                faulted = True
-                                break
-                    else:
-                        # bounded wait: still slice it — a multi-second
-                        # §IV deadline must not delay dead-host detection
-                        # (socket heartbeats, process joins) to the
-                        # termination instant
-                        while True:
-                            remaining = t_term - clock()
-                            if remaining <= 0.0:
-                                fused = rf.wait(0.0)
-                                break
-                            if (fused := rf.wait(min(remaining,
-                                                     sup.wait_slice))):
-                                break
-                            if sup.check():
-                                faulted = True
-                                break
-                    if faulted and rf.wait(0.0):
-                        # the round fused in the window between the wait
-                        # timing out and the supervisor giving up on it —
-                        # a completed round is never thrown away
-                        fused, faulted = True, False
-                    tw = clock()
-                    stage["wait"] += tw - ts
-                    if tr is not None:
-                        tr.emit(telemetry.ROUND, t_disp, tw - t_disp,
-                                job=job.job_id, round=ridx,
-                                label="fused" if fused else "purged")
-                    # reclaim the round's stragglers.  View-lifetime
-                    # invariant for zero-copy transports: this round's
-                    # accepted results are NOT yet decoded (decode rides
-                    # one iteration behind, see ``pending``), so its
-                    # purge must not recycle their result slots — only
-                    # strictly older rounds', which this same loop
-                    # already decoded (finish_round(r-1) above precedes
-                    # purge(r) on this thread, hence precedes purge(r+1)
-                    # a fortiori).  Dispatch-slot reuse is safe
-                    # immediately: a straggler still reading a recycled
-                    # block can only produce a result fusion rejects
-                    # without dereferencing.
-                    pool.purge_round(ctx)
-                    # feed the controller this round's signals; a retune
-                    # takes effect from the NEXT encode (the buffered
-                    # round keeps the geometry it was encoded with)
-                    tc = clock()       # purge wake-ups stay out of the
-                    stale_now = self.fusion.stale_results   # control stage
-                    ctrl.observe(RoundObservation(
-                        round_idx=global_round - 1, job_id=job.job_id,
-                        wait=tw - ts, fused=bool(fused),
-                        stale=stale_now - prev_stale,
-                        deadline_margin=(None if t_term is None
-                                         else t_term - tw),
-                        rounds_left=R_job - ridx - 1,
-                        utilization=pool.busy_seconds
-                        / max(tw - t0, 1e-9)))
-                    prev_stale = stale_now
-                    if tr is not None and len(ctrl.trace) > n_retunes:
-                        for rt in ctrl.trace[n_retunes:]:
-                            tr.emit(telemetry.RETUNE, tc, job=job.job_id,
-                                    round=ridx,
-                                    value=float(rt["omega_new"]),
-                                    label=rt["reason"])
-                        n_retunes = len(ctrl.trace)
-                    stage["control"] += clock() - tc
-                    if not fused:
-                        term = True
-                        break
-                    pending = (rf, ridx, l, pi, pj, rcode)
-                if pending is not None:   # drain the decode-behind stage
-                    finish_round(*pending)
                 end = clock()
                 lr.release(terminated=term)
                 if tr is not None:
@@ -707,6 +903,14 @@ class Master:
         # serialization-copied vs out-of-band bytes, negotiated frame
         # protocol); purely in-process backends leave this None
         transport_stats = getattr(pool, "wire_stats", None)
+        if cfg.code_family == "hierarchical":
+            # the salvage ledger rides transport_stats on every backend:
+            # sub-task results accepted at all, and the subset that landed
+            # beyond the master's wait frontier (banked straggler work)
+            transport_stats = dict(transport_stats or {})
+            transport_stats["subtask_results"] = self.fusion.subtask_results
+            transport_stats["salvaged_subtasks"] = (
+                self.fusion.salvaged_subtasks)
 
         J = len(starts_l)
         result = metrics.RuntimeResult(

@@ -35,13 +35,21 @@ import numpy as np
 from repro.core import coding, layering, scheduling
 
 __all__ = ["RuntimeConfig", "JobSpec", "RoundContext", "RoundBatch",
-           "TaskResult", "WireBatch", "ArenaSlice", "ArenaBatchRef",
-           "ArenaResultRef", "BACKEND_NAMES", "COMPRESS_MODES",
+           "GroupBatch", "TaskResult", "WireBatch", "WireGroup",
+           "ArenaSlice", "ArenaBatchRef", "ArenaResultRef",
+           "BACKEND_NAMES", "CODE_FAMILIES", "COMPRESS_MODES",
            "FAULT_POLICIES", "SHM_MODES", "FRAME_PROTOS"]
 
 #: Worker-transport backends the runtime can dispatch over (see
 #: :mod:`repro.runtime.transport`).
 BACKEND_NAMES = ("thread", "process", "jax", "socket")
+
+#: Coded-task families: ``polynomial`` is the paper's flat §II-A code
+#: (one codeword per round, a purge discards a straggler's whole task);
+#: ``hierarchical`` stacks ``levels`` per-level MDS codewords per
+#: dispatch (Ferdinand & Draper), aligned MSB-plane-first with the digit
+#: layering, so a straggler's completed sub-tasks stay decode-usable.
+CODE_FAMILIES = ("polynomial", "hierarchical")
 
 #: Worker-loss policies (see :mod:`repro.runtime.faults`): ``fail-fast``
 #: raises :class:`~repro.runtime.errors.TransportDeadError` on the first
@@ -115,6 +123,8 @@ class RuntimeConfig:
     compress: str = "auto"         # socket frame codec: COMPRESS_MODES key
     shm: str = "auto"              # process backend arena: SHM_MODES key
     frame_proto: int = 0           # socket frame protocol: FRAME_PROTOS key
+    code_family: str = "polynomial"   # coded-task family: CODE_FAMILIES key
+    levels: int = 1                # hierarchical: sub-tasks per dispatch
     fault_policy: str = "fail-fast"   # worker loss: FAULT_POLICIES key
     heartbeat_interval: float = 1.0   # socket: seconds between pings
     heartbeat_timeout: float = 15.0   # socket: silence -> worker dead
@@ -180,6 +190,30 @@ class RuntimeConfig:
             raise ValueError(
                 f"frame_proto={self.frame_proto} is only meaningful with "
                 f"backend='socket' (got backend={self.backend!r})")
+        if self.code_family not in CODE_FAMILIES:
+            raise ValueError(f"unknown code family {self.code_family!r}; "
+                             f"known: {CODE_FAMILIES}")
+        if self.code_family == "hierarchical":
+            if self.levels < 2:
+                raise ValueError(
+                    f"code_family='hierarchical' needs levels >= 2 (one "
+                    f"level IS the polynomial family); got {self.levels}")
+            if self.shm == "on":
+                # group dispatches carry per-level slices over the pickled
+                # pipe path — the block arena's seq-keyed ring reclamation
+                # is level-blind, so requiring it would silently degrade
+                # to pickling anyway; reject the contradiction
+                raise ValueError(
+                    "shm='on' is incompatible with "
+                    "code_family='hierarchical': group dispatch bypasses "
+                    "the block arena (use shm='auto' or 'off')")
+        elif self.levels != 1:
+            # a level count with the flat family would be silently
+            # ignored — reject the contradiction, mirroring hosts=
+            raise ValueError(
+                f"levels={self.levels} is only meaningful with "
+                f"code_family='hierarchical' (got "
+                f"code_family={self.code_family!r})")
         if self.fault_policy not in FAULT_POLICIES:
             raise ValueError(f"unknown fault policy {self.fault_policy!r}; "
                              f"known: {FAULT_POLICIES}")
@@ -249,6 +283,21 @@ class RuntimeConfig:
         """
         return coding.PolynomialCode(
             n1=self.n1, n2=self.n2,
+            omega=self.omega if omega is None else omega, mode="float")
+
+    def hier_code(self, levels: Optional[int] = None,
+                  omega: Optional[float] = None) -> coding.HierarchicalCode:
+        """The hierarchical code family for this geometry.
+
+        ``levels`` overrides the configured level count (the master clips
+        the last dispatch group of a job to the rounds that remain);
+        ``omega`` overrides the redundancy the same way :meth:`code` does,
+        so the adaptive controller's retunes and the fault supervisor's
+        fleet refits flow into the per-level lengths unchanged.
+        """
+        return coding.HierarchicalCode(
+            n1=self.n1, n2=self.n2,
+            levels=self.levels if levels is None else levels,
             omega=self.omega if omega is None else omega, mode="float")
 
     def to_system_config(self):
@@ -455,6 +504,47 @@ class WireBatch:
     @property
     def count(self) -> int:
         return self.x.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupBatch:
+    """One worker's slice of a hierarchical dispatch group (local form).
+
+    ``levels`` holds one :class:`RoundBatch` per level the worker was
+    assigned sub-tasks for, in MSB-first level order — level l is
+    plane-pair round ``base_round + l``.  The worker runs them in order
+    with a cancellation checkpoint before every sub-task, so a purge of
+    one fused level skips exactly that level's remainder while later
+    levels (banked ahead-of-frontier work) keep computing.  Each level
+    keeps its *own* :class:`RoundContext` (they fuse and purge
+    independently); the group shares one transport ``seq``.
+    """
+
+    levels: tuple[RoundBatch, ...]
+
+    @property
+    def count(self) -> int:
+        return sum(b.count for b in self.levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireGroup:
+    """Transport-serializable twin of :class:`GroupBatch`.
+
+    One :class:`WireBatch` per level, all stamped with the group's shared
+    ``seq``: the existing purge watermark drops a whole queued group,
+    while a ``purgelvl`` message (seq + round index) cancels a single
+    fused level without touching its siblings.
+    """
+
+    seq: int
+    job_id: int
+    base_round: int
+    levels: tuple[WireBatch, ...]
+
+    @property
+    def count(self) -> int:
+        return sum(b.count for b in self.levels)
 
 
 @dataclasses.dataclass(frozen=True)

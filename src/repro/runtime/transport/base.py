@@ -207,6 +207,61 @@ class WorkerTransport(abc.ABC):
                     delays: np.ndarray) -> None:
         """Deliver one worker's round slice (backend-specific hop)."""
 
+    def submit_group(self, ctxs: list[RoundContext], Xs: list[np.ndarray],
+                     Ys: list[np.ndarray], kappas: list[np.ndarray],
+                     delays: Optional[list] = None) -> None:
+        """Dispatch one hierarchical group: level l's codeword (plane-pair
+        round ``ctxs[l].round_idx``) is sliced per its *own* eq. (1) split
+        ``kappas[l]``, and each worker receives ONE group message holding
+        its per-level slices in MSB-first level order.  All levels share a
+        single dispatch ``seq`` (the group purge watermark); each level
+        keeps its own context so fused levels purge individually
+        (:meth:`purge_level`) while later levels keep computing.
+        """
+        if delays is None:
+            delays = [self.sample_round_delays(kappa) for kappa in kappas]
+        seq = self._seq
+        self._seq += 1
+        for ctx in ctxs:
+            ctx.seq = seq
+        if self._tracer is not None:
+            self._tracer.emit(telemetry.DISPATCH, clock(),
+                              job=ctxs[0].job_id, round=ctxs[0].round_idx,
+                              value=float(seq),
+                              label=f"group+{len(ctxs)}")
+        for p in range(self._cfg.num_workers):
+            if p in self.quarantined:
+                # withheld exactly like submit_round's slices: the fault
+                # supervisor re-dispatches the frontier level from kappa
+                continue
+            entries = []
+            for l, ctx in enumerate(ctxs):
+                kappa = kappas[l]
+                lo = int(np.sum(kappa[:p]))
+                hi = lo + int(kappa[p])
+                if lo == hi:
+                    continue
+                entries.append((ctx, lo, Xs[l][lo:hi], Ys[l][lo:hi],
+                                delays[l][p]))
+            if entries:
+                self._send_group(p, seq, entries)
+
+    def _send_group(self, worker_id: int, seq: int,
+                    entries: list[tuple]) -> None:
+        """Deliver one worker's group of per-level slices (each entry is
+        ``(ctx, first_task, x, y, delays)``).  Backends that support the
+        hierarchical family override this; the config layer only admits
+        ``code_family='hierarchical'`` for backends that do."""
+        raise NotImplementedError(
+            f"{self.name} transport does not dispatch hierarchical groups")
+
+    def purge_level(self, ctx: RoundContext) -> None:
+        """Reclaim one fused level's stragglers without cancelling the
+        rest of its group.  The shared cancel event covers in-process
+        backends; remote backends additionally send a level-scoped purge
+        keyed by (group seq, round index)."""
+        ctx.purge()
+
     @abc.abstractmethod
     def start(self) -> None:
         """Bring up the workers; must be called before any submit."""

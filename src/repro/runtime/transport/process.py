@@ -73,7 +73,7 @@ import numpy as np
 from repro.runtime import telemetry
 from repro.runtime.tasks import (ArenaBatchRef, ArenaResultRef,
                                  RoundContext, RuntimeConfig, TaskResult,
-                                 WireBatch)
+                                 WireBatch, WireGroup)
 from repro.runtime.transport import shm as shm_mod
 from repro.runtime.transport.base import WorkerTransport
 from repro.runtime.worker import (BatchRunner, WAIT_SLICE, clock,
@@ -172,6 +172,40 @@ class _PipeGuard:
                 return True
 
 
+class _GroupLevelGuard:
+    """Per-level guard inside a group batch: cancels on the group's purge
+    watermark (whole group dead) OR on a ``purgelvl`` mark for this
+    level's round (level fused elsewhere) — later levels keep running."""
+
+    __slots__ = ("_loop", "_seq", "_round")
+
+    def __init__(self, loop: "_WorkerLoop", seq: int, round_idx: int):
+        self._loop = loop
+        self._seq = seq
+        self._round = round_idx
+
+    def _hit(self) -> bool:
+        loop = self._loop
+        return (self._seq <= loop.watermark or loop.purging
+                or self._round <= loop.level_marks.get(self._seq, -1))
+
+    def cancelled(self) -> bool:
+        self._loop.pump(block=False)
+        return self._hit()
+
+    def wait(self, delay: float) -> bool:
+        loop = self._loop
+        end = clock() + delay
+        while True:
+            remaining = end - clock()
+            if remaining <= 0.0:
+                return False
+            if loop.conn.poll(timeout=min(remaining, WAIT_SLICE)):
+                loop.pump(block=False)
+            if self._hit():
+                return True
+
+
 class _WorkerLoop:
     """One worker process's event loop (runs inside the child).
 
@@ -186,6 +220,10 @@ class _WorkerLoop:
         self.conn = conn
         self._results = results
         self.watermark = -1          # highest purged dispatch seq
+        #: per-group level-purge marks: group seq -> highest purged round
+        #: index within that group (a fused level's stragglers are
+        #: reclaimed without touching the group's later levels)
+        self.level_marks: dict[int, int] = {}
         self.stopping = False
         self._drain_on_stop = True
         self.queue: collections.deque = collections.deque()
@@ -246,8 +284,21 @@ class _WorkerLoop:
         kind = msg[0]
         if kind == "round":
             self.queue.append(msg[1])
+        elif kind == "group":
+            self.queue.append(msg[1])
+        elif kind == "purgelvl":
+            # level-scoped purge: cancel round msg[2] of group msg[1]
+            # only — later levels of the group keep computing (they are
+            # future rounds the master has not fused yet)
+            seq, ridx = msg[1], msg[2]
+            self.level_marks[seq] = max(self.level_marks.get(seq, -1), ridx)
         elif kind == "purge":
             self.watermark = max(self.watermark, msg[1])
+            if self.level_marks:
+                # group seqs at/below the watermark are dead wholesale;
+                # their per-level marks are no longer reachable
+                self.level_marks = {s: r for s, r in self.level_marks.items()
+                                    if s > self.watermark}
             if self._result_arena is not None:
                 # recycle result slots of rounds STRICTLY older than the
                 # watermark, not the watermark round itself: the master
@@ -300,9 +351,16 @@ class _WorkerLoop:
             if self.queue:
                 batch = self.queue.popleft()
                 if batch.seq <= self.watermark or self.purging:
-                    self.runner.count_purged(batch)
+                    self.runner.count_purged_any(batch)
                     continue
                 self._cur_seq = batch.seq
+                if isinstance(batch, WireGroup):
+                    seq = batch.seq
+                    self.runner.run_group(
+                        batch.levels,
+                        lambda lb: _GroupLevelGuard(self, seq,
+                                                    lb.round_idx))
+                    continue
                 if isinstance(batch, ArenaBatchRef):
                     batch = batch.to_batch(self._dispatch_arena)
                 self.runner.run(batch, _PipeGuard(self, batch.seq))
@@ -399,6 +457,7 @@ class ProcessTransport(WorkerTransport):
         # shutdown so the master can report them with the run result
         self._arena_rounds = 0          # slices dispatched as descriptors
         self._pickle_rounds = 0         # slices dispatched as pickles
+        self._group_dispatches = 0      # hierarchical group messages sent
         self._arena_fallbacks = 0       # ring-full (or dead-pipe) declines
         self._arena_dispatch_bytes = 0  # block bytes copied into arenas
         self._pickle_dispatch_bytes = 0  # block bytes sent through pickles
@@ -515,6 +574,44 @@ class ProcessTransport(WorkerTransport):
             return
         self._pickle_rounds += 1
         self._pickle_dispatch_bytes += x.nbytes + y.nbytes
+
+    def _send_group(self, worker_id: int, seq: int,
+                    entries: list[tuple]) -> None:
+        """One pickled ``("group", WireGroup)`` message per worker.
+
+        Groups always ride the pickled pipe path: per-level slices are a
+        fraction of a flat round each, and the block arena's seq-keyed
+        ring reclamation is level-blind (config validation rejects
+        ``shm='on'`` with the hierarchical family for exactly this
+        reason).
+        """
+        levels = tuple(
+            WireBatch(seq=seq, job_id=ctx.job_id, round_idx=ctx.round_idx,
+                      first_task_id=lo, x=x, y=y, delays=d)
+            for ctx, lo, x, y, d in entries)
+        group = WireGroup(seq=seq, job_id=levels[0].job_id,
+                          base_round=levels[0].round_idx, levels=levels)
+        try:
+            self._conns[worker_id][0].send(("group", group))
+        except (BrokenPipeError, OSError):
+            return               # worker died under us: drop the slices
+        self._group_dispatches += 1
+        self._pickle_dispatch_bytes += sum(b.x.nbytes + b.y.nbytes
+                                           for b in levels)
+
+    def purge_level(self, ctx: RoundContext) -> None:
+        """Level-scoped purge: reclaim one fused level's stragglers with
+        a ``("purgelvl", seq, round)`` mark while the group's later
+        levels keep computing (banked ahead-of-frontier work)."""
+        ctx.purge()              # master side: fusion drops stale results
+        if ctx.seq < 0:
+            return               # never dispatched
+        for conn, _ in self._conns:
+            try:
+                if not conn.closed:
+                    conn.send(("purgelvl", ctx.seq, ctx.round_idx))
+            except (BrokenPipeError, OSError):  # worker already gone
+                pass
 
     def dead_worker_map(self) -> dict[int, str]:
         if not self._started or self._shutting_down:
@@ -713,6 +810,7 @@ class ProcessTransport(WorkerTransport):
                 "shm_active": bool(self._arena_rounds),
                 "arena_rounds": self._arena_rounds,
                 "pickle_rounds": self._pickle_rounds,
+                "group_dispatches": self._group_dispatches,
                 "arena_fallbacks": self._arena_fallbacks,
                 "dispatch_arena_bytes": self._arena_dispatch_bytes,
                 "dispatch_pickle_bytes": self._pickle_dispatch_bytes,

@@ -104,7 +104,7 @@ import pickle
 
 from repro.runtime import telemetry
 from repro.runtime.tasks import (RoundContext, RuntimeConfig, TaskResult,
-                                 WireBatch)
+                                 WireBatch, WireGroup)
 from repro.runtime.transport.base import WorkerTransport
 from repro.runtime.transport.process import _WorkerLoop
 
@@ -1051,6 +1051,16 @@ class SocketTransport(WorkerTransport):
         # the master's next liveness check either way
         self.links[worker_id].send(("round", wire))
 
+    def _send_group(self, worker_id: int, seq: int, entries: list) -> None:
+        levels = tuple(
+            WireBatch(seq=seq, job_id=ctx.job_id, round_idx=ctx.round_idx,
+                      first_task_id=lo, x=np.ascontiguousarray(x),
+                      y=np.ascontiguousarray(y), delays=d)
+            for ctx, lo, x, y, d in entries)
+        group = WireGroup(seq=seq, job_id=levels[0].job_id,
+                          base_round=levels[0].round_idx, levels=levels)
+        self.links[worker_id].send(("group", group))
+
     def purge_round(self, ctx: RoundContext) -> None:
         ctx.purge()               # master side: fusion drops stale results
         if ctx.seq < 0:
@@ -1058,6 +1068,13 @@ class SocketTransport(WorkerTransport):
         self._watermark = max(self._watermark, ctx.seq)
         for link in self.links:
             link.send(("purge", ctx.seq))
+
+    def purge_level(self, ctx: RoundContext) -> None:
+        ctx.purge()
+        if ctx.seq < 0:
+            return
+        for link in self.links:
+            link.send(("purgelvl", ctx.seq, ctx.round_idx))
 
     # -- occupancy / outcome counters ----------------------------------------
     @property

@@ -58,8 +58,8 @@ from typing import Callable, Optional, Protocol
 import numpy as np
 
 from repro.runtime import telemetry
-from repro.runtime.tasks import (RoundBatch, RoundContext, RuntimeConfig,
-                                 TaskResult, WireBatch)
+from repro.runtime.tasks import (GroupBatch, RoundBatch, RoundContext,
+                                 RuntimeConfig, TaskResult, WireBatch)
 from repro.runtime.transport.base import StragglerModel, WorkerTransport
 
 __all__ = ["StragglerModel", "Worker", "WorkerPool", "BatchRunner",
@@ -220,6 +220,33 @@ class BatchRunner:
                                   worker_id=self.worker_id,
                                   value=value, finished_at=now))
 
+    def run_group(self, batches, make_guard) -> None:
+        """Run a hierarchical group's level slices in MSB-first order.
+
+        ``make_guard(batch)`` builds each level's own cancellation guard,
+        and :meth:`run` re-checks it before every sub-task — the
+        between-level (in fact between-sub-task) checkpoint: a level
+        purge (that level fused elsewhere) skips exactly that level's
+        remaining sub-tasks while later levels still run, and a group
+        purge or deadline termination cancels everything *from the next
+        checkpoint on*.  Completed sub-tasks were already emitted one by
+        one, so a purge never discards shipped progress — the
+        hierarchical family's whole point.
+        """
+        for batch in batches:
+            self.run(batch, make_guard(batch))
+
+    def count_purged_any(self, batch) -> None:
+        """`count_purged` that also accepts a group form — local
+        :class:`GroupBatch` or wire :class:`~repro.runtime.tasks.WireGroup`
+        — by dropping every level."""
+        levels = getattr(batch, "levels", None)
+        if levels is not None:
+            for b in levels:
+                self.count_purged(b)
+        else:
+            self.count_purged(batch)
+
 
 class _EventGuard:
     """Thread-backend guard: the round's shared cancel event + pool stop.
@@ -315,11 +342,15 @@ class Worker(threading.Thread):
                     return          # stopping and drained
                 if self.purging:    # stopping in purge mode: count + exit
                     for b in self._queue:
-                        self.runner.count_purged(b)
+                        self.runner.count_purged_any(b)
                     self._queue.clear()
                     return
                 batch = self._queue.popleft()
-            self.runner.run(batch, _EventGuard(batch.ctx, self))
+            if isinstance(batch, GroupBatch):
+                self.runner.run_group(
+                    batch.levels, lambda b: _EventGuard(b.ctx, self))
+            else:
+                self.runner.run(batch, _EventGuard(batch.ctx, self))
 
 
 class WorkerPool(WorkerTransport):
@@ -379,7 +410,7 @@ class WorkerPool(WorkerTransport):
             return
         with w._cv:          # dead thread: count what it left behind
             for b in w._queue:
-                w.runner.count_purged(b)
+                w.runner.count_purged_any(b)
             w._queue.clear()
 
     def _send_slice(self, worker_id: int, ctx: RoundContext, first_task: int,
@@ -390,6 +421,18 @@ class WorkerPool(WorkerTransport):
         self.workers[worker_id].submit_round(
             RoundBatch(ctx=ctx, first_task_id=first_task, x=x, y=y,
                        delays=delays))
+
+    def _send_group(self, worker_id: int, seq: int,
+                    entries: list[tuple]) -> None:
+        """One :class:`GroupBatch` of per-level zero-copy views; the
+        worker thread runs the levels in order against each level's own
+        shared cancel event, so ``purge_level`` (the base default —
+        ``ctx.purge()``) reclaims a fused level immediately."""
+        del seq    # in-process: the live contexts carry the purge signal
+        batches = tuple(
+            RoundBatch(ctx=ctx, first_task_id=lo, x=x, y=y, delays=d)
+            for ctx, lo, x, y, d in entries)
+        self.workers[worker_id].submit_round(GroupBatch(levels=batches))
 
     def dispatch_round(self, ctx, X, Y, kappa, delays=None) -> None:
         """Back-compat alias (pre-transport name) for ``submit_round``."""

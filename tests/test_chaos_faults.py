@@ -27,6 +27,7 @@ The cases are timing-robust but multi-second (real SIGKILLs, real TCP
 hosts); CI runs them in their own timeboxed step outside tier-1.
 """
 
+import dataclasses
 import multiprocessing
 import os
 import random
@@ -175,5 +176,63 @@ def test_socket_chaos_kill_and_revive():
         res, _ = _run_under_chaos(cfg, 40, inject, join_timeout=180.0)
     assert res.workers_lost >= 1
     _check_invariants(res, cfg)
+    assert not [t.name for t in threading.enumerate()
+                if t.name.startswith("runtime-")]
+
+
+def _hier_degrade_cfg(backend, hosts=None, seed=0):
+    cfg = _degrade_cfg(backend, hosts=hosts, seed=seed)
+    return dataclasses.replace(cfg, code_family="hierarchical", levels=2)
+
+
+@pytest.mark.parametrize("backend", ("process", "socket"))
+def test_hierarchical_chaos_salvage_ledger_holds(backend):
+    """The sub-task-granular family under the same seeded chaos: the
+    outcome-agnostic invariants 1-6 hold *unchanged* (invariant 4 reads
+    "fused level rounds accepted exactly k sub-task results"), the
+    salvage ledger stays well-formed — every accepted sub-task result is
+    one RESULT event and the salvaged subset never exceeds it — and
+    every released resolution decode-verifies, whatever mix of kills,
+    re-dispatches, and (on socket) revives the schedule produced."""
+    rng = random.Random(29)
+    if backend == "process":
+        cfg = _hier_degrade_cfg("process", seed=29)
+        victims = rng.sample(range(len(MU5)), rng.choice((1, 2)))
+        schedule = sorted(rng.uniform(0.3, 1.6) for _ in victims)
+
+        def inject():
+            procs = _await_worker_processes(len(MU5))
+            start = time.monotonic()
+            for at, wid in zip(schedule, victims):
+                time.sleep(max(0.0, start + at - time.monotonic()))
+                os.kill(procs[wid].pid, signal.SIGKILL)
+
+        res, _ = _run_under_chaos(cfg, 20, inject)
+    else:
+        kill_at = rng.uniform(0.8, 1.5)
+        revive_after = rng.uniform(1.5, 2.5)
+        with LocalCluster(len(MU5)) as cluster:
+            cfg = _hier_degrade_cfg("socket", hosts=cluster.hosts, seed=29)
+            victim = rng.randrange(len(MU5))
+
+            def inject():
+                time.sleep(kill_at)
+                cluster.kill(victim)
+                time.sleep(revive_after)
+                cluster.revive(victim)
+
+            res, _ = _run_under_chaos(cfg, 40, inject, join_timeout=180.0)
+    assert res.workers_lost >= 1       # the schedule really landed
+    _check_invariants(res, cfg)
+    stats = res.transport_stats
+    n_results = sum(e.kind == telemetry.RESULT
+                    for e in (res.trace_events or []))
+    assert stats["subtask_results"] == n_results
+    assert 0 <= stats["salvaged_subtasks"] <= stats["subtask_results"]
+    released = res.released >= 0
+    if released.any():
+        assert np.nanmax(res.verify_errors[released]) < 1e-9
+    assert not [p.name for p in multiprocessing.active_children()
+                if p.name.startswith("runtime-")]
     assert not [t.name for t in threading.enumerate()
                 if t.name.startswith("runtime-")]

@@ -51,7 +51,7 @@ def test_docs_exist_and_carry_anchors():
     names = {p.name for p in files}
     assert {"paper-map.md", "architecture.md", "adaptive-omega.md",
             "observability.md", "fault-tolerance.md",
-            "serving-gateway.md"} <= names, names
+            "serving-gateway.md", "hierarchical-coding.md"} <= names, names
     assert anchors_in(DOCS / "paper-map.md"), \
         "paper-map.md lost its code anchors"
 
@@ -89,5 +89,8 @@ def test_paper_map_covers_the_load_bearing_surface():
             "repro.runtime.transport.shm.BlockArena",
             "repro.runtime.tasks.ArenaBatchRef",
             "repro.runtime.transport.socket_host.MAGIC2",
+            "repro.core.coding.HierarchicalCode",
+            "repro.runtime.tasks.WireGroup",
+            "repro.runtime.fusion.FusionNode.begin_group",
     ):
         assert required in text, f"paper-map.md no longer maps {required}"

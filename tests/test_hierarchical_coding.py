@@ -1,0 +1,356 @@
+"""Hierarchical code family: level math, any-k decode, salvage fusion.
+
+The property/conformance tier for the sub-task-granular runtime
+(ISSUE: "straggler work is never discarded"):
+
+* **Level math** — MSB-heavy per-level lengths at *equal aggregate
+  budget* (``sum == levels * ceil(k*omega)``), every level at least the
+  recovery threshold ``k``, deterministic rounding — with hand-computed
+  cases pinning the exact allocation.
+* **Decode** — every level of a :class:`~repro.core.coding
+  .HierarchicalCode` is a true MDS code: any ``k``-subset of its symbols
+  reconstructs the product (allclose in float mode, bit-exact in gfp),
+  and re-decoding the *same* subset in a different arrival order is
+  bit-identical (the fusion node's arrival order must never leak into
+  the value).
+* **Partial-level isolation** — a level that received fewer than ``k``
+  results never corrupts a sibling level's decode: levels are
+  independent codewords, and the grouped fusion node routes by
+  ``(job_id, round_idx)``.
+* **Salvage/stale exactness** — the grouped
+  :class:`~repro.runtime.fusion.FusionNode` regression tier for the
+  sub-task-granular accounting bugfix: a purged worker's *late* sub-task
+  results (duplicate task ids racing a re-dispatch, or arrivals after
+  the group closed) are counted stale exactly once each, and the
+  salvage ledger counts exactly the accepted results beyond the
+  master's wait frontier.
+
+Property blocks ride ``_hypothesis_compat`` — they run when hypothesis
+is installed and skip cleanly when not.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+from _hypothesis_compat import hypothesis, st
+
+from repro.core import coding
+from repro.runtime.fusion import FusionNode
+from repro.runtime.tasks import RoundContext, RuntimeConfig, TaskResult
+
+
+def _all_task_products(code, A, B):
+    """Every coded symbol's product for one level, stacked (T, ...)."""
+    X, Y = np.asarray(code.encode_a(A)), np.asarray(code.encode_b(B))
+    return np.stack([X[t].T @ Y[t] for t in range(code.num_tasks)])
+
+
+class TestLevelLengths:
+    def test_hand_computed_exact_split(self):
+        # k=4, levels=3, omega=1.5: base = ceil(4*1.5) = 6, budget = 18,
+        # extra = 18 - 12 = 6, weights (3,2,1)/6 -> alloc (3,2,1):
+        hc = coding.HierarchicalCode(n1=2, n2=2, levels=3, omega=1.5)
+        assert hc.base_tasks == 6
+        assert hc.level_lengths == (7, 6, 5)
+        assert hc.num_tasks == 18
+
+    def test_hand_computed_rounding_leftover_goes_msb_first(self):
+        # k=4, levels=2, omega=1.25: base = 5, budget = 10, extra = 2,
+        # weights (2,1)/3 -> floor alloc (1,0), leftover 1 -> MSB level:
+        hc = coding.HierarchicalCode(n1=2, n2=2, levels=2, omega=1.25)
+        assert hc.level_lengths == (6, 4)
+
+    def test_rate_one_every_level_exactly_k(self):
+        hc = coding.HierarchicalCode(n1=2, n2=2, levels=3, omega=1.0)
+        assert hc.level_lengths == (4, 4, 4)
+
+    @pytest.mark.parametrize("n1,n2,levels,omega",
+                             [(2, 2, 2, 1.5), (2, 2, 4, 1.3), (3, 2, 3, 1.1),
+                              (2, 1, 5, 2.0), (4, 2, 2, 1.07)])
+    def test_budget_preserved_msb_heavy_all_above_k(self, n1, n2, levels,
+                                                    omega):
+        hc = coding.HierarchicalCode(n1=n1, n2=n2, levels=levels,
+                                     omega=omega)
+        lengths = hc.level_lengths
+        assert sum(lengths) == levels * hc.base_tasks   # equal budget
+        assert all(t >= hc.k for t in lengths)          # decodable levels
+        assert list(lengths) == sorted(lengths, reverse=True)  # MSB-heavy
+
+    def test_budget_below_levels_times_k_rejected(self):
+        with pytest.raises(ValueError, match="budget"):
+            coding._hier_level_lengths(4, 3, 11)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            coding.HierarchicalCode(n1=2, n2=2, levels=0)
+        with pytest.raises(ValueError):
+            coding.HierarchicalCode(n1=2, n2=2, levels=2, omega=0.5)
+        with pytest.raises(ValueError):
+            coding.HierarchicalCode(n1=2, n2=2, levels=2, mode="nope")
+
+
+class TestHierarchicalDecodeFloat:
+    def test_hand_computed_two_level_decode(self):
+        # k = 2 (n1=2, n2=1), omega=1.5 -> base 3, lengths (4, 2).
+        # A is 2x2 split column-wise into two blocks, B one block:
+        # the product is small enough to state outright.
+        hc = coding.HierarchicalCode(n1=2, n2=1, levels=2, omega=1.5)
+        assert hc.level_lengths == (4, 2)
+        A = np.array([[1.0, 2.0], [3.0, 4.0]])       # (K=2, M=2)
+        B = np.array([[5.0], [6.0]])                 # (K=2, N=1)
+        want = np.array([[1 * 5 + 3 * 6], [2 * 5 + 4 * 6]])  # = [[23],[34]]
+        for lvl in range(2):
+            code = hc.level_code(lvl)
+            prods = _all_task_products(code, A, B)
+            for ids in itertools.combinations(range(code.num_tasks), hc.k):
+                dec = np.asarray(hc.decode_level(lvl, list(ids),
+                                                 prods[np.asarray(ids)]))
+                np.testing.assert_allclose(dec, want, rtol=1e-9, atol=1e-9)
+
+    def test_any_k_subset_every_level(self, rng):
+        hc = coding.HierarchicalCode(n1=2, n2=2, levels=3, omega=1.5)
+        A = rng.integers(-100, 100, size=(16, 8)).astype(np.float64)
+        B = rng.integers(-100, 100, size=(16, 8)).astype(np.float64)
+        exact = A.T @ B
+        for lvl in range(hc.levels):
+            code = hc.level_code(lvl)
+            prods = _all_task_products(code, A, B)
+            subsets = [list(range(hc.k)),
+                       list(range(code.num_tasks - hc.k, code.num_tasks)),
+                       list(rng.choice(code.num_tasks, hc.k,
+                                       replace=False))]
+            for ids in subsets:
+                dec = np.asarray(hc.decode_level(lvl, ids,
+                                                 prods[np.asarray(ids)]))
+                np.testing.assert_allclose(dec, exact, rtol=1e-8, atol=1e-6)
+
+    def test_same_subset_any_order_bit_identical(self, rng):
+        """Arrival order must not leak into the decoded value: the fusion
+        node hands ids in arrival order, and a re-dispatch can permute
+        it between otherwise identical runs."""
+        hc = coding.HierarchicalCode(n1=2, n2=2, levels=2, omega=1.5)
+        A = rng.normal(size=(16, 8))
+        B = rng.normal(size=(16, 8))
+        for lvl in range(hc.levels):
+            code = hc.level_code(lvl)
+            prods = _all_task_products(code, A, B)
+            ids = list(rng.choice(code.num_tasks, hc.k, replace=False))
+            base = np.asarray(hc.decode_level(lvl, ids,
+                                              prods[np.asarray(ids)]))
+            for _ in range(4):
+                perm = list(rng.permutation(len(ids)))
+                pids = [ids[i] for i in perm]
+                dec = np.asarray(hc.decode_level(
+                    lvl, pids, prods[np.asarray(pids)]))
+                assert base.tobytes() == dec.tobytes()
+
+    def test_shared_plan_cache_across_equal_lengths(self):
+        """Two levels with equal codeword length share one DecodePlan —
+        the LRU keys by geometry, not by family."""
+        hc = coding.HierarchicalCode(n1=2, n2=2, levels=2, omega=1.0)
+        assert hc.plan(0) is hc.plan(1)
+        flat = coding.PolynomialCode(n1=2, n2=2, omega=1.0)
+        assert hc.plan(0) is flat.plan()
+
+
+class TestHierarchicalDecodeGfp:
+    def test_every_subset_bit_exact(self, rng):
+        hc = coding.HierarchicalCode(n1=2, n2=1, levels=2, omega=1.5,
+                                     mode="gfp")
+        A = rng.integers(0, 255, size=(16, 6)).astype(np.uint64)
+        B = rng.integers(0, 255, size=(16, 3)).astype(np.uint64)
+        exact = A.astype(np.int64).T @ B.astype(np.int64)
+        for lvl in range(hc.levels):
+            code = hc.level_code(lvl)
+            X, Y = code.encode(A, B)
+            tasks = code.compute_all_tasks(X, Y)
+            for ids in itertools.combinations(range(code.num_tasks), hc.k):
+                dec = hc.decode_level(lvl, list(ids), tasks[np.asarray(ids)])
+                np.testing.assert_array_equal(np.asarray(dec), exact)
+
+
+class TestHierarchicalProperties:
+    """Hypothesis property block (skips without hypothesis installed)."""
+
+    @hypothesis.given(st.integers(1, 3), st.integers(1, 2),
+                      st.integers(2, 4),
+                      st.floats(1.0, 2.0, allow_nan=False),
+                      st.integers(0, 2 ** 16))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_any_level_any_subset_decodes(self, n1, n2, levels, omega,
+                                          seed):
+        rng = np.random.default_rng(seed)
+        hc = coding.HierarchicalCode(n1=n1, n2=n2, levels=levels,
+                                     omega=omega)
+        A = rng.integers(-50, 50, size=(8, 4 * n1)).astype(np.float64)
+        B = rng.integers(-50, 50, size=(8, 4 * n2)).astype(np.float64)
+        exact = A.T @ B
+        lvl = int(rng.integers(hc.levels))
+        code = hc.level_code(lvl)
+        prods = _all_task_products(code, A, B)
+        ids = list(rng.choice(code.num_tasks, hc.k, replace=False))
+        dec = np.asarray(hc.decode_level(lvl, ids, prods[np.asarray(ids)]))
+        np.testing.assert_allclose(dec, exact, rtol=1e-7, atol=1e-5)
+        # and the same subset, re-ordered, is bit-identical
+        perm = [ids[i] for i in rng.permutation(len(ids))]
+        dec2 = np.asarray(hc.decode_level(lvl, perm,
+                                          prods[np.asarray(perm)]))
+        assert dec.tobytes() == dec2.tobytes()
+
+    @hypothesis.given(st.integers(2, 4), st.integers(1, 5),
+                      st.integers(0, 2 ** 16))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_partial_level_never_corrupts_siblings(self, levels, short_by,
+                                                   seed):
+        """Post fewer than ``k`` results to one level of a fusion group:
+        the starved level must not fuse, and every *other* level still
+        decodes bit-correctly — partial arrivals are isolated."""
+        rng = np.random.default_rng(seed)
+        hc = coding.HierarchicalCode(n1=2, n2=2, levels=levels, omega=1.5)
+        A = rng.integers(-50, 50, size=(8, 8)).astype(np.float64)
+        B = rng.integers(-50, 50, size=(8, 8)).astype(np.float64)
+        exact = A.T @ B
+        starved = int(rng.integers(levels))
+        fusion = FusionNode()
+        ctxs = [RoundContext(job_id=0, round_idx=l) for l in range(levels)]
+        rfs = fusion.begin_group(ctxs, hc.k)
+        for lvl in range(levels):
+            code = hc.level_code(lvl)
+            prods = _all_task_products(code, A, B)
+            n_post = (max(0, hc.k - short_by) if lvl == starved else hc.k)
+            ids = rng.choice(code.num_tasks, hc.k, replace=False)[:n_post]
+            for tid in ids:
+                assert fusion.post(TaskResult(
+                    job_id=0, round_idx=lvl, task_id=int(tid), worker_id=0,
+                    value=prods[tid], finished_at=0.0))
+        for lvl in range(levels):
+            if lvl == starved:
+                assert not rfs[lvl].wait(0.0)
+                continue
+            assert rfs[lvl].wait(0.0)
+            dec = np.asarray(rfs[lvl].decode(hc.level_code(lvl)))
+            np.testing.assert_allclose(dec, exact, rtol=1e-8, atol=1e-6)
+        fusion.end_group()
+        assert fusion.stale_results == 0
+
+
+def _result(lvl, tid, value=None, worker=0):
+    return TaskResult(job_id=0, round_idx=lvl, task_id=tid,
+                      worker_id=worker,
+                      value=(np.zeros((2, 2)) if value is None else value),
+                      finished_at=0.0)
+
+
+class TestGroupedFusionAccounting:
+    """Salvage-ledger and stale-exactness regression tier (the sub-task
+    accounting bugfix): dedupe/reconcile stays exact when a purged
+    worker's late sub-task results arrive."""
+
+    def _fused_group(self, hc, A, B):
+        fusion = FusionNode()
+        ctxs = [RoundContext(0, l) for l in range(hc.levels)]
+        rfs = fusion.begin_group(ctxs, hc.k)
+        prods = [_all_task_products(hc.level_code(l), A, B)
+                 for l in range(hc.levels)]
+        return fusion, ctxs, rfs, prods
+
+    def test_salvage_counts_results_beyond_frontier(self, rng):
+        hc = coding.HierarchicalCode(n1=2, n2=1, levels=2, omega=1.5)
+        A = rng.normal(size=(8, 4))
+        B = rng.normal(size=(8, 2))
+        fusion, ctxs, rfs, prods = self._fused_group(hc, A, B)
+        fusion.set_frontier(0)
+        # two level-1 results land while the master waits on level 0:
+        for tid in range(hc.k):
+            assert fusion.post(_result(1, tid, prods[1][tid]))
+        assert fusion.salvaged_subtasks == hc.k
+        # level-0 results at the frontier are accepted but NOT salvage:
+        for tid in range(hc.k):
+            assert fusion.post(_result(0, tid, prods[0][tid]))
+        assert fusion.subtask_results == 2 * hc.k
+        assert fusion.salvaged_subtasks == hc.k
+        assert rfs[0].wait(0.0) and rfs[1].wait(0.0)
+        assert fusion.stale_results == 0
+
+    def test_late_duplicate_subtask_is_stale_exactly_once(self, rng):
+        """The re-dispatch race: a purged worker's last-gasp result for a
+        task id the replacement already delivered must be dropped and
+        counted exactly once — and never double-fuse the level."""
+        hc = coding.HierarchicalCode(n1=2, n2=1, levels=2, omega=1.5)
+        A = rng.normal(size=(8, 4))
+        B = rng.normal(size=(8, 2))
+        fusion, ctxs, rfs, prods = self._fused_group(hc, A, B)
+        fusion.set_frontier(0)
+        assert fusion.post(_result(0, 0, prods[0][0], worker=1))
+        # the dead worker's duplicate of task 0 arrives late:
+        assert not fusion.post(_result(0, 0, prods[0][0], worker=2))
+        assert fusion.stale_results == 1
+        assert fusion.subtask_results == 1          # accepted once only
+        for tid in range(1, hc.k):
+            assert fusion.post(_result(0, tid, prods[0][tid]))
+        assert rfs[0].wait(0.0)
+        # post k-th-plus-one to the fused level: stale again, exactly +1
+        assert not fusion.post(_result(0, hc.k, prods[0][hc.k]))
+        assert fusion.stale_results == 2
+
+    def test_results_after_end_group_are_stale_exactly_once(self, rng):
+        hc = coding.HierarchicalCode(n1=2, n2=1, levels=2, omega=1.5)
+        A = rng.normal(size=(8, 4))
+        B = rng.normal(size=(8, 2))
+        fusion, ctxs, rfs, prods = self._fused_group(hc, A, B)
+        for lvl in range(2):
+            for tid in range(hc.k):
+                assert fusion.post(_result(lvl, tid, prods[lvl][tid]))
+        before = fusion.subtask_results
+        fusion.end_group()
+        # the purged straggler's late partials trickle in after close
+        # (the value is never dereferenced on the reject path):
+        for lvl in range(2):
+            assert not fusion.post(_result(lvl, hc.k, prods[lvl][0]))
+        assert fusion.stale_results == 2
+        assert fusion.subtask_results == before     # ledger untouched
+
+    def test_purged_level_results_stale_not_salvaged(self, rng):
+        """A level cancelled mid-group (master purge) rejects its own
+        late results without touching the salvage ledger."""
+        hc = coding.HierarchicalCode(n1=2, n2=1, levels=2, omega=1.5)
+        A = rng.normal(size=(8, 4))
+        B = rng.normal(size=(8, 2))
+        fusion, ctxs, rfs, prods = self._fused_group(hc, A, B)
+        fusion.set_frontier(0)
+        ctxs[1].purge()                 # deeper level cancelled
+        assert not fusion.post(_result(1, 0, prods[1][0]))
+        assert fusion.stale_results == 1
+        assert fusion.salvaged_subtasks == 0
+        # the frontier level is unaffected:
+        for tid in range(hc.k):
+            assert fusion.post(_result(0, tid, prods[0][tid]))
+        assert rfs[0].wait(0.0)
+
+
+class TestConfigSurface:
+    def test_hier_config_round_trip(self):
+        cfg = RuntimeConfig(mu=(1.0, 1.0, 1.0, 1.0), n1=2, n2=2,
+                            omega=1.5, code_family="hierarchical", levels=2)
+        hc = cfg.hier_code()
+        assert isinstance(hc, coding.HierarchicalCode)
+        assert hc.levels == 2 and hc.k == cfg.k
+
+    def test_polynomial_rejects_levels(self):
+        with pytest.raises(ValueError, match="levels"):
+            RuntimeConfig(mu=(1.0,) * 4, levels=3)
+
+    def test_hierarchical_requires_levels(self):
+        with pytest.raises(ValueError, match="levels"):
+            RuntimeConfig(mu=(1.0,) * 4, code_family="hierarchical",
+                          levels=1)
+
+    def test_hierarchical_rejects_forced_shm(self):
+        with pytest.raises(ValueError, match="shm"):
+            RuntimeConfig(mu=(1.0,) * 4, backend="process", shm="on",
+                          code_family="hierarchical", levels=2)
+
+    def test_unknown_family_rejected(self):
+        with pytest.raises(ValueError, match="code family"):
+            RuntimeConfig(mu=(1.0,) * 4, code_family="fountain")

@@ -21,6 +21,7 @@ overhead so the measured statistics are about the system, not the
 container's timer.
 """
 
+import collections
 import dataclasses
 import multiprocessing
 import os
@@ -35,6 +36,7 @@ from repro.core import simulator
 from repro.runtime import (BACKENDS, FusionNode, RoundContext, RuntimeConfig,
                            TaskResult, TransportDeadError, WireBatch,
                            make_transport, run_jobs)
+from repro.runtime import telemetry
 from repro.runtime.transport import shm as shm_mod
 from repro.runtime.transport.socket_host import LocalCluster
 
@@ -848,3 +850,199 @@ class TestJaxBackendSmoke:
         # float32 device compute: looser than host float64, still tight
         assert np.nanmax(res.verify_errors) < 1e-4
         assert not _runtime_worker_threads()
+
+
+def _hier_cfg(bcfg, backend, **kw):
+    kw.setdefault("code_family", "hierarchical")
+    kw.setdefault("levels", 2)
+    return bcfg(backend, **kw)
+
+
+#: backend -> measured res-0 compute (s) for the *hierarchical* family in
+#: the deadline scenario's stall regime, deadline-free.  The polynomial
+#: baseline above would mis-calibrate: grouped dispatch amortizes wire
+#: round-trips and the per-level ``T`` differs, so the hierarchical rows
+#: measure their own round.
+_HIER_BASELINE: dict = {}
+
+
+def _hier_baseline(backend, bcfg) -> float:
+    if backend not in _HIER_BASELINE:
+        cfg = _hier_cfg(bcfg, backend, arrival_rate=14.0, complexity=8.0,
+                        straggler="stall", stall_workers=(2,),
+                        stall_seconds=2.0, seed=1)
+        res, _ = run_jobs(cfg, num_jobs=6, K=64, M=8, N=8)
+        _HIER_BASELINE[backend] = float(res.layer_compute[:, 0].mean())
+    return _HIER_BASELINE[backend]
+
+
+@pytest.mark.parametrize("backend", BACKENDS_FULL)
+class TestHierarchicalConformance:
+    """Sub-task-granular conformance rows, identical over every backend:
+    the hierarchical family completes decode-verified while *banking*
+    straggler sub-tasks (never discarding them), keeps already-fused
+    levels when a §IV deadline purges mid-group, and reconciles its
+    sub-task ledger exactly against the telemetry event log."""
+
+    def test_hier_stall_completes_and_salvages_subtasks(self, backend,
+                                                        bcfg):
+        """Under a hard stall every job still completes at full
+        resolution (per-level redundancy purges the stalled worker's
+        share), and the salvage ledger is *nonzero*: fast workers' deep-
+        level sub-tasks land while the master still waits on the level-0
+        frontier — work the task-granular family would have thrown away."""
+        cfg = _hier_cfg(bcfg, backend, arrival_rate=14.0, complexity=8.0,
+                        straggler="stall", stall_workers=(2,),
+                        stall_seconds=2.0, seed=1)
+        res, _ = run_jobs(cfg, num_jobs=6, K=64, M=8, N=8, verify=True)
+        assert res.backend == _real_backend(backend)
+        assert res.success.all()
+        assert (res.released == cfg.num_layers - 1).all()
+        assert not res.terminated.any()
+        assert np.nanmax(res.verify_errors) < 1e-9
+        stats = res.transport_stats
+        assert stats["subtask_results"] > 0
+        assert stats["salvaged_subtasks"] > 0
+        assert stats["salvaged_subtasks"] <= stats["subtask_results"]
+        assert not _runtime_worker_threads()
+        assert not _runtime_worker_processes()
+
+    def test_hier_deadline_purge_keeps_completed_levels(self, backend,
+                                                        bcfg):
+        """Purge-mid-level: a deadline that cuts jobs off inside a group
+        must not cost the levels that already fused — terminated jobs
+        still release a verified lower resolution (res-0 keeps its §IV
+        success gap), with the same measured-baseline calibration and
+        slack rationale as the task-granular deadline row above."""
+        deadline = max(0.030, 2.2 * _hier_baseline(backend, bcfg))
+        cfg = _hier_cfg(bcfg, backend, arrival_rate=14.0, complexity=8.0,
+                        deadline=deadline, straggler="stall",
+                        stall_workers=(2,), stall_seconds=2.0, seed=0)
+        res, _ = run_jobs(cfg, num_jobs=20, K=64, M=8, N=8, verify=True)
+        assert res.terminated.any()
+        sr = res.success_rate()
+        assert sr[0] >= 0.9
+        assert sr[-1] < 1.0 and sr[-1] < sr[0]
+        term = np.flatnonzero(res.terminated)
+        assert (res.released[term] >= 0).mean() >= 0.9   # partials shipped
+        assert np.nanmax(res.verify_errors) < 1e-9
+        # res-0 still leads the final resolution; the *strict* per-layer
+        # ordering of the task-granular row is deliberately not asserted:
+        # a group's last levels are dispatched together and can fuse
+        # within microseconds of each other (that concurrency is the
+        # salvage mechanism, not a defect)
+        md = res.mean_delay()
+        assert md[0] < md[-1]
+        assert res.transport_stats["salvaged_subtasks"] > 0
+
+    def test_hier_subtask_ledger_reconciles_with_trace(self, backend,
+                                                       bcfg):
+        """The sub-task ledger is the trace, aggregated: every accepted
+        grouped result is exactly one RESULT event, every fused level
+        round accepted exactly ``k`` of them, every stale rejection is a
+        STALE event, and worker task spans close ``done``/``purged`` in
+        exact agreement with the counters.  (Deliberately *not* asserted:
+        ``DISPATCH == stage_rounds`` — the grouped path emits one
+        DISPATCH per group of ``levels`` rounds, which is the point.)"""
+        cfg = _hier_cfg(bcfg, backend, arrival_rate=60.0, complexity=4.0,
+                        straggler="none", trace=True, seed=0)
+        res, _ = run_jobs(cfg, 5, K=16, M=4, N=4, verify=False)
+        evs = res.trace_events
+        assert evs is not None and res.trace_dropped == 0
+        stats = res.transport_stats
+        arrivals = [e for e in evs if e.kind == telemetry.RESULT]
+        assert len(arrivals) == stats["subtask_results"]
+        assert 0 <= stats["salvaged_subtasks"] <= stats["subtask_results"]
+        assert sum(e.kind == telemetry.STALE for e in evs) == \
+            res.stale_results
+        # fused level rounds accepted exactly k sub-task results each
+        per_round = collections.Counter((e.job, e.round) for e in arrivals)
+        fused_keys = {(e.job, e.round) for e in evs
+                      if e.kind == telemetry.FUSED}
+        assert fused_keys
+        assert all(per_round[key] == cfg.k for key in fused_keys)
+        # worker task spans reconcile across the process/TCP boundary
+        tasks = [e for e in evs if e.kind == telemetry.TASK]
+        assert sum(e.label == "done" for e in tasks) == res.tasks_done
+        assert sum(e.label == "purged" for e in tasks) == res.tasks_purged
+        # one ROUND span per level round, one DISPATCH per *group*
+        assert sum(e.kind == telemetry.ROUND for e in evs) == \
+            res.stage_rounds
+        dispatches = [e for e in evs if e.kind == telemetry.DISPATCH]
+        assert dispatches and all(e.label == f"group+{cfg.levels}"
+                                  for e in dispatches)
+        assert len(dispatches) == res.stage_rounds // cfg.levels
+
+
+class TestHierarchicalDegrade:
+    """SIGKILL mid-level under ``fault_policy="degrade"``: the grouped
+    dispatch path absorbs worker loss exactly like the task-granular
+    family — an ``n - k`` kill completes decode-verified, a below-``k``
+    collapse releases every job at its best level-complete resolution
+    with the loss itemized in the fault log."""
+
+    def _hcfg(self, **kw):
+        kw.setdefault("mu", MU5)
+        kw.setdefault("arrival_rate", 8.0)
+        kw.setdefault("complexity", 8.0)
+        kw.setdefault("fault_policy", "degrade")
+        kw.setdefault("code_family", "hierarchical")
+        kw.setdefault("levels", 2)
+        kw.setdefault("shm", "off")
+        kw.setdefault("seed", 3)
+        return RuntimeConfig(backend="process", **kw)
+
+    def test_hier_process_sigkill_mid_level_completes_verified(self):
+        """Kill ``n - k = 1`` of 5 workers mid-run: its in-flight group
+        slices are re-dispatched at the wait frontier and every job still
+        completes at full resolution, decode-verified, loss itemized —
+        with the salvage ledger intact across the quarantine."""
+        cfg = self._hcfg()
+
+        def inject():
+            procs = _await_worker_processes(len(MU5))
+            time.sleep(0.5)
+            os.kill(procs[1].pid, signal.SIGKILL)
+
+        res, _ = _run_with_faults(cfg, 20, inject)
+        assert res.workers_lost == 1
+        kinds = [e["kind"] for e in res.fault_log]
+        assert kinds.count("quarantine") == 1
+        assert res.success.all()
+        assert not res.degraded.any()
+        assert (res.released == cfg.num_layers - 1).all()
+        assert np.nanmax(res.verify_errors) < 1e-9
+        assert res.transport_stats["subtask_results"] > 0
+        assert not _runtime_worker_processes()
+
+    def test_hier_process_below_k_releases_best_level_itemized(self):
+        """Kill down to ``S < k`` survivors mid-level: every remaining
+        job releases promptly at its best level-complete resolution
+        (whatever levels had fused when the fleet collapsed), marked
+        degraded, with both quarantines and the collapse itemized — and
+        everything that *was* released decode-verifies."""
+        cfg = self._hcfg()
+        marks: dict = {}
+
+        def inject():
+            procs = _await_worker_processes(len(MU5))
+            time.sleep(0.5)
+            for wid in (1, 3):
+                os.kill(procs[wid].pid, signal.SIGKILL)
+            marks["killed_at"] = time.monotonic()
+
+        res, _ = _run_with_faults(cfg, 20, inject, join_timeout=60.0)
+        assert time.monotonic() - marks["killed_at"] < 15.0
+        assert res.workers_lost == 2
+        kinds = [e["kind"] for e in res.fault_log]
+        assert kinds.count("quarantine") == 2
+        assert "fleet-collapse" in kinds
+        assert {e["worker"] for e in res.fault_log
+                if e["kind"] == "quarantine"} == {1, 3}
+        assert res.degraded.any()
+        assert res.terminated[res.degraded].all()
+        # every level-complete resolution that shipped decode-verifies
+        shipped = res.released >= 0
+        if shipped.any():
+            assert np.nanmax(res.verify_errors[shipped]) < 1e-9
+        assert not _runtime_worker_processes()
